@@ -1,0 +1,34 @@
+"""Paper Fig 4: overhead of the decoupled designs over the 'golden'
+reference (zero latency, one request/cycle/port) at scaled-up datasets."""
+
+from __future__ import annotations
+
+from repro.core.workloads import run_workload
+
+PAPER_FIG4 = {  # percent overhead over golden
+    "binsearch": 11.9, "binsearch_for": 8.6, "hashtable": 17.6,
+    "mergesort": 95.4, "mergesort_opt": 1.3, "multispmv": 33.7,
+    "spmv_sparse": 55.3, "spmv_dense": 0.3,
+}
+
+CELLS = [
+    ("binsearch", "fig4", "binsearch"),
+    ("binsearch_for", "fig4", "binsearch_for"),
+    ("hashtable", "fig4", "hashtable"),
+    ("mergesort", "fig4", "mergesort"),
+    ("mergesort_opt", "fig4", "mergesort_opt"),
+    ("multispmv", "paper", "multispmv"),
+    ("spmv", "fig4_sparse", "spmv_sparse"),
+    ("spmv", "fig4_dense", "spmv_dense"),
+]
+
+
+def run(csv_print) -> None:
+    for bench, scale, label in CELLS:
+        r = run_workload(bench, "rhls_dec", scale=scale, latency=100,
+                         rif=128)
+        ovh = 100.0 * r.overhead
+        paper = PAPER_FIG4[label]
+        csv_print(f"fig4/{label},{r.cycles},golden={r.golden};"
+                  f"overhead_pct={ovh:.1f};paper_pct={paper};"
+                  f"correct={r.correct}")

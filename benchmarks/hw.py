@@ -1,0 +1,9 @@
+"""Target hardware constants (TPU v5e-class chip) used by the roofline."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per ICI link (term uses one link,
+                              # per the assignment's roofline formula)
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512
+VMEM_BYTES = 128 * 2**20

@@ -1,0 +1,60 @@
+"""Decoupled-kernel microbenchmarks.
+
+Wall-clock on this CPU container is NOT TPU performance; the derived
+metric that transfers is the simulator's cycle model (RIF sweeps showing
+latency hiding) plus interpret-mode correctness-at-shape.  We report
+both: us_per_call is the CPU interpret wall time (plumbing overhead
+indicator), derived carries the simulator cycles.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workloads import run_workload
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_print) -> None:
+    r = np.random.default_rng(0)
+
+    # RIF sweep (the paper's central knob) from the simulator
+    for rif in (2, 8, 32, 128):
+        res = run_workload("hashtable", "rhls_dec", scale="paper",
+                           latency=100, rif=rif)
+        csv_print(f"kernel/rif_sweep/hashtable/rif={rif},0,"
+                  f"cycles={res.cycles};golden={res.golden}")
+
+    # gather: decoupled kernel (interpret) vs XLA take
+    from repro.kernels.dae_gather import dae_gather
+    table = jnp.asarray(r.standard_normal((4096, 256)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, 4096, 512), jnp.int32)
+    for method in ("pipelined", "rif", "ref"):
+        us = _time(lambda: dae_gather(table, idx, method=method))
+        csv_print(f"kernel/gather/{method},{us:.0f},interpret_cpu")
+
+    # merge
+    from repro.kernels.dae_merge import merge_sorted
+    a = jnp.sort(jnp.asarray(r.standard_normal(2048), jnp.float32))
+    b = jnp.sort(jnp.asarray(r.standard_normal(2048), jnp.float32))
+    us = _time(lambda: merge_sorted(a, b, tile=256))
+    csv_print(f"kernel/merge/pallas,{us:.0f},interpret_cpu")
+
+    # flash attention
+    from repro.kernels.flash_attention import flash_attention
+    q = jnp.asarray(r.standard_normal((1, 4, 512, 64)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, 2, 512, 64)), jnp.float32)
+    us = _time(lambda: flash_attention(q, k, v))
+    csv_print(f"kernel/flash/pallas,{us:.0f},interpret_cpu")

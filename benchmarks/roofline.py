@@ -1,0 +1,157 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs/dev            / PEAK_FLOPS_BF16
+    memory term     = HLO_bytes/dev            / HBM_BW
+    collective term = collective_link_bytes/dev / ICI_LINK_BW
+FLOPs/bytes come from the scan-corrected cost probes (see
+launch/dryrun.py: XLA counts while bodies once); collective bytes from
+the HLO scan with ring-model link accounting (launch/hlo_stats.py).
+
+MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (prefill) /
+2*N_active*batch (decode), with N_active = params - embedding table -
+inactive expert weights.  The ratio MODEL_FLOPS / (HLO_FLOPs * chips)
+measures how much compiled compute is "useful" (remat/attention/dispatch
+overheads push it below 1).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--md out.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.hw import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+
+def model_flops(arch: str, kind: str, seq_len: int, global_batch: int) -> dict:
+    import sys
+    sys.path.insert(0, str(ROOT / "src"))
+    import jax
+    from repro.configs import get_config
+    from repro.launch.specs import param_specs
+
+    cfg = get_config(arch)
+    specs = param_specs(cfg)
+    n_total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs))
+    # embedding gather is not a matmul
+    n_embed = cfg.vocab * cfg.d_model
+    # inactive routed experts do no work for a given token
+    n_inactive = 0
+    if cfg.n_experts:
+        n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+        per_expert = 3 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff)
+        n_inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    n_active = n_total - n_embed - n_inactive
+    tokens = seq_len * global_batch
+    if kind == "train":
+        mf = 6 * n_active * tokens
+    elif kind == "prefill":
+        mf = 2 * n_active * tokens
+    else:  # decode: one new token per sequence
+        mf = 2 * n_active * global_batch
+    return {"n_total": n_total, "n_active": n_active, "model_flops": mf}
+
+
+def analyze(rec: dict) -> dict:
+    tot = rec["cost_corrected"]["total"]
+    nd = rec["n_devices"]
+    t_comp = tot["flops"] / PEAK_FLOPS_BF16
+    t_mem = tot["bytes"] / HBM_BW
+    t_coll = tot["link_bytes"] / ICI_LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["kind"], rec["seq_len"],
+                     rec["global_batch"])
+    useful = mf["model_flops"] / max(tot["flops"] * nd, 1.0)
+    # roofline fraction: ideal model-compute time / achievable step time
+    ideal = mf["model_flops"] / nd / PEAK_FLOPS_BF16
+    frac = ideal / max(bound, 1e-12)
+    return {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "hbm_per_dev_gb": (rec["memory"]["argument_bytes"]
+                           + rec["memory"]["temp_bytes"]
+                           + rec["memory"]["output_bytes"]) / nd / 2**30
+        if rec["memory"]["argument_bytes"] > 0 else 0.0,
+        **mf,
+    }
+
+
+_ADVICE = {
+    "memory": "cut HBM traffic: fuse attention (chunked/flash), tighter "
+              "remat policy, bf16 intermediates",
+    "compute": "already MXU-bound: raise useful-ratio (less remat "
+               "recompute), overlap the small collective tail",
+    "collective": "re-shard to cut resharding collectives / overlap "
+                  "all-gathers with compute / compress grads",
+}
+
+
+def build_table(records) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful | roofline frac | bytes/dev GB | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        if rec["status"] == "skipped":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | — | — "
+                f"| — | — | — | — | — | skipped: sub-quadratic attention "
+                f"required |")
+            continue
+        a = rec["analysis"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {a['t_compute_s']:.3f} | {a['t_memory_s']:.3f} "
+            f"| {a['t_collective_s']:.3f} | **{a['dominant']}** "
+            f"| {a['useful_flops_ratio']:.2f} | {a['roofline_fraction']:.2f} "
+            f"| {a['hbm_per_dev_gb']:.1f} | {_ADVICE[a['dominant']]} |")
+    return "\n".join(lines)
+
+
+def load_records(pattern: str = "*.json"):
+    records = []
+    for f in sorted(glob.glob(str(DRYRUN / pattern))):
+        name = Path(f).stem
+        if name.count("__") != 2:      # skip variant/baseline artifacts
+            continue
+        rec = json.loads(Path(f).read_text())
+        if rec.get("variant"):
+            continue
+        if rec["status"] == "ok":
+            rec["analysis"] = analyze(rec)
+        records.append(rec)
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", default=str(ROOT / "experiments" / "roofline.md"))
+    ap.add_argument("--json", default=str(ROOT / "experiments" /
+                                          "roofline.json"))
+    ns = ap.parse_args()
+    records = load_records()
+    table = build_table(records)
+    Path(ns.md).write_text("# Roofline (single-pod 16x16 unless noted)\n\n"
+                           + table + "\n")
+    slim = [{k: v for k, v in r.items() if k != "traceback"}
+            for r in records]
+    Path(ns.json).write_text(json.dumps(slim, indent=1, default=float))
+    print(table)
+
+
+if __name__ == "__main__":
+    main()

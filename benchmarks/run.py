@@ -1,0 +1,50 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+    table1_perf       Table 1  (cycles, all benchmarks x HLS configs)
+    table2_resources  Table 2  (buffer/channel resource analogue)
+    table3_moms       Table 3  (MOMS + DRAM memory model subset)
+    fig4_golden       Fig. 4   (overhead over the golden reference)
+    kernel_bench      decoupled-kernel microbenches + RIF sweeps
+
+Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 ...]
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def _csv(line: str) -> None:
+    print(line, flush=True)
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+
+    def on(name: str) -> bool:
+        return not want or any(w in name for w in want)
+
+    print("name,us_per_call,derived")
+    if on("table1"):
+        from benchmarks import table1_perf
+        table1_perf.run(_csv)
+    if on("table2"):
+        from benchmarks import table2_resources
+        table2_resources.run(_csv)
+    if on("table3"):
+        from benchmarks import table3_moms
+        table3_moms.run(_csv)
+    if on("fig4"):
+        from benchmarks import fig4_golden
+        fig4_golden.run(_csv)
+    if on("kernel"):
+        from benchmarks import kernel_bench
+        kernel_bench.run(_csv)
+
+
+if __name__ == "__main__":
+    main()

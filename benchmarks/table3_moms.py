@@ -1,0 +1,37 @@
+"""Paper Table 3: the read-only-compatible subset under a MOMS +
+row-buffer DRAM model instead of fixed latency."""
+
+from __future__ import annotations
+
+from repro.core.workloads import run_workload
+
+PAPER_TABLE3 = {
+    ("binsearch", "vitis"): 2_239_063, ("binsearch", "vitis_dec"): 65_011,
+    ("binsearch", "rhls"): 677_274, ("binsearch", "rhls_dec"): 23_302,
+    ("binsearch_for", "vitis"): 2_294_243,
+    ("binsearch_for", "vitis_dec"): 83_937,
+    ("binsearch_for", "rhls"): 701_472,
+    ("binsearch_for", "rhls_dec"): 25_928,
+    ("hashtable", "vitis"): 1_904_751, ("hashtable", "vitis_dec"): 53_887,
+    ("hashtable", "rhls"): 1_008_246, ("hashtable", "rhls_dec"): 18_716,
+    ("spmv", "vitis"): 283_829, ("spmv", "vitis_dec"): 55_037,
+    ("spmv", "rhls"): 29_918, ("spmv", "rhls_dec"): 29_732,
+}
+
+SUBSET = ("binsearch", "binsearch_for", "hashtable", "spmv")  # read-only
+
+
+def run(csv_print) -> None:
+    for bench in SUBSET:
+        fixed_cycles = {}
+        for config in ("vitis", "vitis_dec", "rhls", "rhls_dec"):
+            fixed = run_workload(bench, config, scale="paper", mem="fixed")
+            moms = run_workload(bench, config, scale="paper", mem="moms",
+                                max_outstanding=64)
+            fixed_cycles[config] = fixed.cycles
+            paper = PAPER_TABLE3.get((bench, config), 0)
+            csv_print(
+                f"table3/{bench}/{config},{moms.cycles},"
+                f"fixed={fixed.cycles};moms_vs_fixed="
+                f"{moms.cycles / fixed.cycles:.2f};paper_moms={paper};"
+                f"correct={moms.correct}")

@@ -1,0 +1,73 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred
+steps with the full substrate (synthetic data, prefetch, AdamW + cosine,
+fault-tolerant loop with checkpoints + straggler monitor).
+
+Run (full):  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+Run (demo):  PYTHONPATH=src python examples/train_lm.py --preset 20m --steps 50
+"""
+
+import argparse
+import dataclasses
+import logging
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data import PrefetchLoader, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models.common import ModelConfig
+from repro.models.registry import build_model
+from repro.models.transformer import param_count
+from repro.optim import AdamW, warmup_cosine
+from repro.runtime import StragglerMonitor, TrainLoopConfig, fit
+
+PRESETS = {
+    # ~params: d^2*12*L + 2*V*d
+    "20m": dict(n_layers=6, d_model=384, n_heads=6, n_kv_heads=2,
+                d_ff=1536, vocab=8192),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=3072, vocab=32768),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="20m", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ns = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    cfg = get_config("qwen3-4b", smoke=False, **PRESETS[ns.preset],
+                     dtype="float32", head_dim=0)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    n = param_count(params)
+    print(f"arch=dense preset={ns.preset} params={n/1e6:.1f}M")
+
+    opt = AdamW(lr=warmup_cosine(3e-4, 20, ns.steps), weight_decay=0.1)
+    step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=ns.seq, global_batch=ns.batch)
+    mon = StragglerMonitor()
+    t0 = time.time()
+    out = fit(step, params, opt.init(params), ds.batch_at,
+              TrainLoopConfig(total_steps=ns.steps, ckpt_every=25,
+                              ckpt_dir=ns.ckpt_dir, log_every=10),
+              monitor=mon)
+    dt = time.time() - t0
+    print(f"done: {out['steps']} steps in {dt:.1f}s "
+          f"({dt / max(len(out['losses']), 1):.2f}s/step)")
+    print(f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"(restarts={out['restarts']}, "
+          f"stragglers={len(out['straggler_events'])})")
+    assert out["losses"][-1] < out["losses"][0], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

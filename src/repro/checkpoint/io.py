@@ -1,0 +1,89 @@
+"""Atomic pytree (de)serialization.
+
+Arrays are gathered to host, written to a temp file, then renamed —
+readers never see a partial checkpoint (crash-consistent).  Leaf paths
+are flattened to string keys; metadata (step, anything JSON) rides in a
+sidecar entry.  On load, arrays are ``device_put`` against the given
+shardings, which is what makes restarts *elastic*: the saved checkpoint
+is mesh-agnostic and reshards onto whatever mesh the restarted job has.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
+    """Flatten to npz-safe arrays; dtypes npz can't store natively
+    (bfloat16, fp8) ride as uint views + a dtype sidecar."""
+    flat, dtypes = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":     # ml_dtypes etc.
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        flat[key] = arr
+    return flat, dtypes
+
+
+def save_pytree(path: str | Path, tree: Any, meta: Optional[dict] = None
+                ) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat, dtypes = _flatten(tree)
+    payload = {"meta": meta or {}, "dtypes": dtypes}
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=np.frombuffer(
+                json.dumps(payload).encode(), dtype=np.uint8), **flat)
+        os.replace(tmp, path)          # atomic publish
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_pytree(path: str | Path, like: Any,
+                shardings: Any = None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs); optionally device_put with ``shardings`` (same
+    structure) — elastic resharding happens here."""
+    path = Path(path)
+    with np.load(path, allow_pickle=False) as z:
+        payload = json.loads(bytes(z["__meta__"].tobytes()).decode() or "{}")
+        meta = payload.get("meta", payload)
+        dtypes = payload.get("dtypes", {})
+        flat = {k: z[k] for k in z.files if k != "__meta__"}
+    import ml_dtypes  # registered numpy extension dtypes (bf16, fp8)
+    for k, dt in dtypes.items():
+        if k in flat and str(flat[k].dtype) != dt:
+            flat[k] = flat[k].view(np.dtype(dt))
+
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves_with_path))
+    out = []
+    for (path_elems, leaf), sh in zip(leaves_with_path, shard_leaves):
+        key = "/".join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path_elems)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        if arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, out), meta

@@ -1,0 +1,95 @@
+"""Checkpoint manager: retention, async writes, auto-resume.
+
+The async writer is another instance of the decoupled pattern: the train
+loop issues a snapshot request (host copy of the sharded state) and keeps
+stepping; the writer thread is the Execute side draining a bounded queue.
+"""
+
+from __future__ import annotations
+
+import queue
+import re
+import threading
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint.io import load_pytree, save_pytree
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._error: Optional[BaseException] = None
+        self._thread = None
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # -- write ---------------------------------------------------------------
+    def _path(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}.npz"
+
+    def save(self, step: int, state: Any, meta: Optional[dict] = None,
+             block: bool = False) -> None:
+        if self._error:
+            raise RuntimeError("checkpoint writer failed") from self._error
+        meta = dict(meta or {}, step=step)
+        # snapshot to host NOW so the donated buffers can be reused
+        host_state = jax.tree.map(lambda a: jax.device_get(a), state)
+        if self.async_write and not block:
+            self._q.put((step, host_state, meta))
+        else:
+            self._write(step, host_state, meta)
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                self._write(*item)
+            except BaseException as e:  # surfaced on next save()
+                self._error = e
+
+    def _write(self, step: int, state: Any, meta: dict) -> None:
+        save_pytree(self._path(step), state, meta)
+        self._gc()
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*.npz"))
+        for old in ckpts[:-self.keep]:
+            old.unlink(missing_ok=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._q.join() if hasattr(self._q, "join") else None
+        # drain by queueing a barrier
+        while not self._q.empty():
+            import time
+            time.sleep(0.01)
+
+    # -- read ----------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for p in self.dir.glob("step_*.npz"):
+            m = _STEP_RE.search(p.name)
+            if m:
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore_latest(self, like: Any, shardings: Any = None
+                       ) -> Optional[Tuple[int, Any, dict]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        state, meta = load_pytree(self._path(step), like, shardings)
+        return step, state, meta

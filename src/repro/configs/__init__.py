@@ -1,0 +1,41 @@
+"""Assigned-architecture configs (``--arch <id>``) + smoke variants."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import smoke_variant
+from repro.configs.shapes import SHAPES, InputShape, long_context_ok
+from repro.models.common import ModelConfig
+
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite_moe
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _deepseek
+from repro.configs.qwen2_72b import CONFIG as _qwen2
+from repro.configs.minicpm3_4b import CONFIG as _minicpm3
+from repro.configs.granite_34b import CONFIG as _granite34
+from repro.configs.qwen3_4b import CONFIG as _qwen3
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.rwkv6_1_6b import CONFIG as _rwkv6
+from repro.configs.chameleon_34b import CONFIG as _chameleon
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.arch: c for c in (
+        _seamless, _granite_moe, _deepseek, _qwen2, _minicpm3,
+        _granite34, _qwen3, _hymba, _rwkv6, _chameleon,
+    )
+}
+
+
+def get_config(arch: str, smoke: bool = False, **overrides) -> ModelConfig:
+    import dataclasses
+    cfg = ARCHS[arch]
+    if smoke:
+        cfg = smoke_variant(cfg)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+__all__ = ["ARCHS", "SHAPES", "InputShape", "get_config", "long_context_ok",
+           "smoke_variant"]

@@ -1,0 +1,17 @@
+"""chameleon-34b [vlm]: 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536; early-fusion VQ image tokens (frontend STUB: token ids are
+already fused) [arXiv:2405.09818; unverified].  Uses qk-norm."""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22_016,
+    vocab=65_536,
+    qk_norm=True,
+)

@@ -1,0 +1,20 @@
+"""granite-moe-3b-a800m [moe]: 32L d_model=1536 24H (GQA kv=8)
+d_ff=512 (per-expert), vocab=49155, MoE 40 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]."""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    moe_d_ff=512,
+    n_experts=40,
+    top_k=8,
+    vocab=49_155,
+    tie_embeddings=True,
+)

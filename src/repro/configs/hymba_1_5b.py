@@ -1,0 +1,20 @@
+"""hymba-1.5b [hybrid]: 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16; parallel attn+mamba heads; sliding-window
+attention with 3 global-attention layers [arXiv:2411.13676; hf]."""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32_001,
+    ssm_state=16,
+    ssm_expand=2,
+    window=1024,
+    global_attn_layers=(0, 15, 31),
+)

@@ -1,0 +1,22 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec multimodal backbone.
+
+24L d_model=1024 16H (GQA kv=16) d_ff=8192 vocab=256206
+[arXiv:2308.11596; hf].  The audio frontend is a STUB: input_specs
+provides precomputed frame embeddings.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256_206,
+    mlp_kind="relu",
+    norm_eps=1e-5,
+)

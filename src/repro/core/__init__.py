@@ -1,0 +1,13 @@
+"""The paper's primary contribution: explicit decoupling (DAE4HLS).
+
+Layers:
+  * :mod:`repro.core.dae` / :mod:`repro.core.simulator` /
+    :mod:`repro.core.workloads` — the paper-faithful programming model,
+    cycle-level simulator, and the seven benchmark programs (Tables 1/3,
+    Fig 4).
+  * :mod:`repro.core.decouple` / :mod:`repro.core.pipeline` — the
+    TPU-native decoupled ops (Pallas kernels behind a JAX API) and RIF
+    planning used by the LM framework.
+"""
+
+from repro.core.decouple import *  # noqa: F401,F403

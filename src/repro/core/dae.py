@@ -1,0 +1,223 @@
+"""Explicit-decoupling programming model (DAE4HLS §3).
+
+This module embeds the paper's four primitives
+
+    stream_enq(channel, value)        stream_deq(channel, capacity)
+    decouple_request(channel, addr)   decouple_response(channel, capacity)
+
+as an executable program representation.  A *DAE program* is a set of
+communicating sequential processes (the paper's Access / Execute loops,
+instantiated as parallel execution units by the HLS `dataflow` pragma).
+Each process is a Python generator that yields effect objects; the
+scheduler in :mod:`repro.core.simulator` executes them either
+
+  * functionally (zero-latency memory) to check algorithmic correctness, or
+  * under a cycle-level timing model (fixed-latency AXI or a MOMS-like
+    coalescing memory) to reproduce the paper's cycle counts.
+
+The same programs therefore serve as the paper-faithful reproduction and
+as the oracle for the TPU adaptation in :mod:`repro.core.decouple`.
+
+Correctness rules (paper §5.1) are enforced structurally:
+
+  * every ``decouple_request`` must be matched by exactly one
+    ``decouple_response`` on the same channel (checked at program end);
+  * a request blocks while the channel already has ``capacity`` responses
+    in flight or queued (deadlock-freedom by capacity bounding, §5.4);
+  * streams block on enq when full and on deq when empty; leftover stream
+    entries at termination are reported as a conservation violation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Generator, Iterable, List, Optional, Tuple
+
+__all__ = [
+    "Channel",
+    "LoadChannel",
+    "StreamChannel",
+    "Req",
+    "Resp",
+    "Enq",
+    "Deq",
+    "Delay",
+    "Store",
+    "StoreWait",
+    "Halt",
+    "Process",
+    "DaeProgram",
+    "ConservationError",
+]
+
+
+class ConservationError(RuntimeError):
+    """Raised when request/response or enq/deq counts do not match."""
+
+
+# ---------------------------------------------------------------------------
+# Channels
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Channel:
+    """Base point-to-point channel identified by name.
+
+    ``capacity`` bounds the number of in-flight entries; the paper passes
+    capacity at the dequeue site (Listing 1), we attach it to the channel
+    object (equivalent, single consumer).
+    """
+
+    name: str
+    capacity: int = 16
+
+    def __post_init__(self) -> None:
+        if self.capacity < 1:
+            raise ValueError(f"channel {self.name}: capacity must be >= 1")
+
+
+@dataclasses.dataclass
+class StreamChannel(Channel):
+    """In-order value FIFO between two program points (paper §3.1)."""
+
+
+@dataclasses.dataclass
+class LoadChannel(Channel):
+    """Decoupled-load channel (paper §3.2).
+
+    A request enqueues an *address*; the memory subsystem supplies the
+    response.  ``port`` names the memory port (AXI interface / HBM stream)
+    this channel issues on; multiple channels may share a port, which is
+    exactly the Mergesort deadlock scenario of §5.3 that capacity
+    bounding protects against.
+    """
+
+    port: str = "mem"
+
+
+# ---------------------------------------------------------------------------
+# Effects yielded by processes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Req:
+    """decouple_request(channel, addr): issue a load for ``addr``."""
+
+    channel: LoadChannel
+    addr: int
+
+
+@dataclasses.dataclass
+class Resp:
+    """decouple_response(channel): consume the oldest response (in order).
+
+    The scheduler sends the loaded value back into the generator.
+    """
+
+    channel: LoadChannel
+
+
+@dataclasses.dataclass
+class Enq:
+    """stream_enq(channel, value)."""
+
+    channel: StreamChannel
+    value: Any
+
+
+@dataclasses.dataclass
+class Deq:
+    """stream_deq(channel) -> value (sent back into the generator)."""
+
+    channel: StreamChannel
+
+
+@dataclasses.dataclass
+class Delay:
+    """Occupy the process for ``cycles`` cycles of compute."""
+
+    cycles: int = 1
+
+
+@dataclasses.dataclass
+class Store:
+    """Issue a store of ``value`` to ``addr`` on ``port`` (fire and forget;
+
+    ordering per static AXI ID is guaranteed by the memory model, paper
+    §5.4)."""
+
+    port: str
+    addr: int
+    value: Any
+
+
+@dataclasses.dataclass
+class StoreWait:
+    """Wait until all previously issued stores on ``port`` are observable
+
+    (the write-response channel of §5.4)."""
+
+    port: str
+
+
+@dataclasses.dataclass
+class Halt:
+    """Explicit end-of-process marker (optional; returning also halts)."""
+
+
+Effect = Any
+ProcessGen = Generator[Effect, Any, None]
+
+
+@dataclasses.dataclass
+class Process:
+    """A named sequential process (one Access or Execute loop).
+
+    ``ii`` is the initiation interval floor imposed by the *schedule* of
+    the surrounding implementation: statically scheduled HLS (the Vitis
+    baseline) often cannot reach II=1 for these loops (paper §7), while
+    dynamically scheduled R-HLS can.  Every yielded effect costs at least
+    ``ii`` cycles of issue occupancy on the process.
+    """
+
+    name: str
+    gen: ProcessGen
+    ii: int = 1
+
+
+@dataclasses.dataclass
+class DaeProgram:
+    """A set of processes plus the memory ports they reference."""
+
+    name: str
+    processes: List[Process]
+    # map port name -> one of the simulator's memory models; filled by the
+    # scheduler, declared here so programs are self-describing.
+    ports: Tuple[str, ...] = ("mem",)
+
+    def validate_channels(self) -> None:
+        seen: Dict[str, Channel] = {}
+        for p in self.processes:
+            del p
+        # channels are discovered dynamically during execution; nothing to
+        # do statically.  Kept for API symmetry.
+        del seen
+
+
+# ---------------------------------------------------------------------------
+# Helpers used by workload authors
+# ---------------------------------------------------------------------------
+
+
+def request_all(channel: LoadChannel, addrs: Iterable[int]) -> ProcessGen:
+    """An Access loop that issues one request per address (paper Listing 2/3)."""
+
+    for a in addrs:
+        yield Req(channel, a)
+
+
+def drain(channel: StreamChannel, n: int) -> ProcessGen:
+    for _ in range(n):
+        yield Deq(channel)

@@ -1,0 +1,48 @@
+"""Public decoupled-access-execute ops — the paper's technique as a
+composable JAX layer.
+
+Every op has three dispatch modes:
+  * ``pallas``   — the TPU kernel (compiled pl.pallas_call);
+  * ``ref``      — the pure-jnp oracle (used by the dry-run so the
+                   roofline reflects XLA's own gather/scatter lowering);
+  * interpret    — kernels executed in interpret mode (CPU validation).
+
+The RIF (requests-in-flight) knob of the paper maps to the buffer-ring
+depth; ``repro.core.pipeline.plan_rif`` picks it from the
+latency-bandwidth product.
+"""
+
+from __future__ import annotations
+
+from repro.core.pipeline import plan_rif, RifPlan
+from repro.kernels.dae_gather.ops import dae_gather as decoupled_gather
+from repro.kernels.dae_spmv.ops import dae_spmv as decoupled_spmv
+from repro.kernels.dae_spmv.ops import csr_to_bsr
+from repro.kernels.dae_merge.ops import merge_sorted as decoupled_merge
+from repro.kernels.dae_merge.ops import merge_sort as decoupled_merge_sort
+from repro.kernels.dae_chase.ops import (
+    batched_searchsorted as decoupled_searchsorted,
+    hash_lookup as decoupled_hash_lookup,
+)
+from repro.kernels.flash_attention.ops import (
+    flash_attention,
+    flash_decode,
+    flash_decode_paged,
+)
+from repro.kernels.grouped_matmul.ops import grouped_matmul
+
+__all__ = [
+    "plan_rif",
+    "RifPlan",
+    "decoupled_gather",
+    "decoupled_spmv",
+    "csr_to_bsr",
+    "decoupled_merge",
+    "decoupled_merge_sort",
+    "decoupled_searchsorted",
+    "decoupled_hash_lookup",
+    "flash_attention",
+    "flash_decode",
+    "flash_decode_paged",
+    "grouped_matmul",
+]

@@ -1,0 +1,45 @@
+"""RIF planning: how many requests in flight do we need?
+
+The paper's rule (§4.2): "as many values should be looked up in parallel
+as the memory latency in cycles."  The TPU equivalent is the classic
+latency-bandwidth product: to keep HBM busy, the bytes in flight must
+cover latency × bandwidth; the ring depth (num_buffers / RIF) is that
+divided by the block size, clamped by the VMEM budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.common import VMEM_BYTES
+
+# v5e-ish DMA characteristics (see benchmarks/hw.py)
+HBM_BW = 819e9            # bytes/s
+DMA_LATENCY_S = 2e-6      # issue-to-land for a small HBM->VMEM copy
+VMEM_BUDGET_FRACTION = 0.5
+
+
+@dataclasses.dataclass
+class RifPlan:
+    rif: int                 # buffers in flight
+    block_bytes: int
+    inflight_bytes: int
+    vmem_fraction: float
+    note: str
+
+
+def plan_rif(block_bytes: int, *, latency_s: float = DMA_LATENCY_S,
+             bandwidth: float = HBM_BW, vmem_budget: int | None = None,
+             min_rif: int = 2, max_rif: int = 64) -> RifPlan:
+    """Choose the buffer-ring depth for a decoupled stream of
+    ``block_bytes`` blocks."""
+    vmem_budget = vmem_budget or int(VMEM_BYTES * VMEM_BUDGET_FRACTION)
+    need_bytes = latency_s * bandwidth
+    rif_latency = max(min_rif, int(need_bytes // max(block_bytes, 1)) + 1)
+    rif_vmem = max(1, vmem_budget // max(block_bytes, 1))
+    rif = max(min_rif, min(rif_latency, rif_vmem, max_rif))
+    note = ("latency-bound" if rif == rif_latency else
+            "vmem-bound" if rif == rif_vmem else "clamped")
+    return RifPlan(rif=rif, block_bytes=block_bytes,
+                   inflight_bytes=rif * block_bytes,
+                   vmem_fraction=rif * block_bytes / vmem_budget, note=note)

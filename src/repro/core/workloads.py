@@ -1,0 +1,1133 @@
+"""The paper's seven benchmarks as explicit-decoupling DAE programs (§4, §6).
+
+Each benchmark is expressed in the paper's five configurations:
+
+  * ``vitis``       — statically scheduled baseline: dependent loads block
+                      for the full memory latency plus a schedule overhead
+                      (``VITIS_OVH``); FP accumulation loops carry an
+                      II=8 initiation-interval floor (Vivado FP-add chain).
+  * ``vitis_dec``   — explicit decoupling via repurposed burst interfaces
+                      (§5.2): decoupled request/execute loops, but the
+                      static schedule holds the execute loop at II=3 and
+                      only ONE request/response pair may be outstanding
+                      per pointer argument for data-dependent consumption
+                      order (the Mergesort limitation).
+  * ``rhls``        — dynamic HLS without decoupling: dataflow operators
+                      pipeline independent loads at II=1, but request
+                      generation stays gated by program dependencies
+                      (e.g. SPMV's ``rows`` loads), and stores gate the
+                      state edge (§5.4).
+  * ``rhls_stream`` — loads + streams approximating decoupling (§3.2);
+                      same steady-state throughput as decoupling but
+                      with an extra stream hop, and a structural deadlock
+                      for mergesort (two fetch loops share the
+                      disambiguation queue — reproduced here).
+  * ``rhls_dec``    — full explicit decoupling in dynamic HLS (§5.3).
+
+Cycle-model calibration constants are module-level and documented; the
+goal is to reproduce the paper's Table 1 speedup bands and the Fig. 4
+golden-overhead structure, not RTL-exact cycle counts (see
+EXPERIMENTS.md §Repro for the side-by-side comparison).
+
+Every program also *computes the real result* through the simulated
+memory system; results are checked against a NumPy reference, and the
+simulator enforces the paper's §5.1 conservation rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dae import (
+    DaeProgram,
+    Delay,
+    Deq,
+    Enq,
+    LoadChannel,
+    Process,
+    Req,
+    Resp,
+    Store,
+    StoreWait,
+    StreamChannel,
+)
+from repro.core.simulator import (
+    DeadlockError,
+    FixedLatencyMemory,
+    Fused,
+    MemoryModel,
+    MomsMemory,
+    Par,
+    SimResult,
+    simulate,
+)
+
+__all__ = ["BENCHMARKS", "CONFIGS", "run_workload", "WorkloadReport"]
+
+CONFIGS = ("vitis", "vitis_dec", "rhls", "rhls_stream", "rhls_dec")
+BENCHMARKS = (
+    "binsearch",
+    "binsearch_for",
+    "hashtable",
+    "mergesort",
+    "mergesort_opt",
+    "spmv",
+    "multispmv",
+)
+
+# --- calibration constants (documented in EXPERIMENTS.md §Repro) -----------
+VITIS_OVH = 10       # static-schedule overhead per dependent-load iteration
+VITIS_DEC_II = 3     # Vitis Decoupled execute-loop initiation interval
+VITIS_FP_II = 8      # Vivado FP accumulate loop-carried II
+VITIS_ROW_FILL = 30  # static pipeline fill/drain per outer-loop iteration
+RHLS_STORE_GATE = 50 # R-HLS (non-decoupled) store state-edge release delay
+
+
+# ---------------------------------------------------------------------------
+# Dataset construction
+# ---------------------------------------------------------------------------
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def make_binsearch_data(scale: str, seed: int = 0) -> Dict[str, Any]:
+    n, lookups = {
+        "paper": (1_234_567, 1_000),
+        "fig4": (1_234_567, 4_000),
+        "small": (1_021, 24),
+    }[scale]
+    r = _rng(seed)
+    arr = np.unique(r.integers(0, n * 8, size=n * 2))[:n].astype(np.int64)
+    assert len(arr) == n
+    keys = arr[r.integers(0, n, size=lookups)]
+    return {"arr": arr, "keys": keys, "n": n}
+
+
+def make_hashtable_data(scale: str, seed: int = 1) -> Dict[str, Any]:
+    chains, chain_len = {
+        "paper": (1_024, 16),
+        "fig4": (4_096, 16),
+        "small": (16, 4),
+    }[scale]
+    n_entries = chains * chain_len
+    # entry = (key, value, next_idx); chain c occupies [c*L, (c+1)*L)
+    entries: List[Tuple[int, int, int]] = []
+    r = _rng(seed)
+    values = r.integers(0, 1 << 30, size=n_entries)
+    for c in range(chains):
+        for k in range(chain_len):
+            idx = c * chain_len + k
+            nxt = idx + 1 if k + 1 < chain_len else -1
+            entries.append((idx, int(values[idx]), nxt))
+    # look up the LAST key of each chain -> walks the full chain
+    lookup_keys = [c * chain_len + (chain_len - 1) for c in range(chains)]
+    heads = [c * chain_len for c in range(chains)]
+    return {
+        "entries": entries,
+        "keys": lookup_keys,
+        "heads": heads,
+        "chains": chains,
+        "chain_len": chain_len,
+    }
+
+
+def make_spmv_data(scale: str, seed: int = 2) -> Dict[str, Any]:
+    nrows, ncols, nnz = {
+        "paper": (1_024, 16_777_216, 17_221),
+        "fig4_sparse": (16_384, 16_777_216, 17_221),
+        "fig4_dense": (128, 65_536, 65_536),
+        "small": (16, 256, 64),
+    }[scale]
+    r = _rng(seed)
+    counts = r.multinomial(nnz, np.ones(nrows) / nrows)
+    rows = np.zeros(nrows + 1, dtype=np.int64)
+    rows[1:] = np.cumsum(counts)
+    cols = r.integers(0, ncols, size=nnz).astype(np.int64)
+    val = r.standard_normal(nnz).astype(np.float64)
+    vec = r.standard_normal(ncols).astype(np.float64)
+    return {"rows": rows, "cols": cols, "val": val, "vec": vec, "nrows": nrows,
+            "ncols": ncols, "nnz": nnz}
+
+
+def make_mergesort_data(scale: str, seed: int = 3) -> Dict[str, Any]:
+    n = {"paper": 234, "fig4": 8_192, "small": 37}[scale]
+    r = _rng(seed)
+    table = r.integers(0, 1 << 31, size=n).astype(np.int64)
+    return {"table": table, "n": n}
+
+
+def make_multispmv_data(scale: str, seed: int = 4) -> Dict[str, Any]:
+    nrows, nnz, iters = {
+        "paper": (128, 1_639, 10),
+        "small": (8, 24, 3),
+    }[scale]
+    r = _rng(seed)
+    counts = r.multinomial(nnz, np.ones(nrows) / nrows)
+    rows = np.zeros(nrows + 1, dtype=np.int64)
+    rows[1:] = np.cumsum(counts)
+    cols = r.integers(0, nrows, size=nnz).astype(np.int64)
+    val = (r.standard_normal(nnz) * 0.3).astype(np.float64)
+    vec = r.standard_normal(nrows).astype(np.float64)
+    return {"rows": rows, "cols": cols, "val": val, "vec": vec,
+            "nrows": nrows, "nnz": nnz, "iters": iters, "alpha": 0.9}
+
+
+# ---------------------------------------------------------------------------
+# NumPy references + golden cycle models (paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def binsearch_ref(arr: np.ndarray, keys: np.ndarray, early: bool) -> Tuple[List[int], int]:
+    """Returns (result index per key, total loads).  ``early`` is the
+    early-exit variant; the _for variant runs EXACTLY ceil(log2 n)
+    iterations (loads included — redundant once the range collapses, as
+    the paper notes for the constant-iteration version)."""
+    n = len(arr)
+    iters_fixed = int(math.ceil(math.log2(n)))
+    results, loads = [], 0
+    for key in keys:
+        lo, hi = 0, n
+        if early:
+            res = -1
+            while lo < hi:
+                mid = (lo + hi) // 2
+                v = arr[mid]
+                loads += 1
+                if v == key:
+                    res = mid
+                    break
+                if v <= key:
+                    lo = mid + 1
+                else:
+                    hi = mid
+            results.append(int(res))
+        else:
+            for _ in range(iters_fixed):
+                mid = (lo + hi) // 2 if lo < hi else min(lo, n - 1)
+                v = arr[mid]
+                loads += 1
+                if lo < hi:
+                    if v <= key:
+                        lo = mid + 1
+                    else:
+                        hi = mid
+            results.append(int(lo))
+    return results, loads
+
+
+def hashtable_ref(entries: Sequence[Tuple[int, int, int]], keys: Sequence[int],
+                  heads: Sequence[int]) -> Tuple[List[int], int]:
+    results, loads = [], 0
+    for key, head in zip(keys, heads):
+        idx = head
+        res = -1
+        while idx >= 0:
+            k, v, nxt = entries[idx]
+            loads += 1
+            if k == key:
+                res = v
+                break
+            idx = nxt
+        results.append(res)
+    return results, loads
+
+
+def spmv_ref(rows, cols, val, vec) -> np.ndarray:
+    nrows = len(rows) - 1
+    out = np.zeros(nrows, dtype=np.float64)
+    for i in range(nrows):
+        s = 0.0
+        for j in range(rows[i], rows[i + 1]):
+            s += val[j] * vec[cols[j]]
+        out[i] = s
+    return out
+
+
+def multispmv_ref(rows, cols, val, vec, iters, alpha) -> np.ndarray:
+    v = vec.copy()
+    for _ in range(iters):
+        out = spmv_ref(rows, cols, val, v)
+        v = out * alpha
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Shared program fragments
+# ---------------------------------------------------------------------------
+
+
+def _blocking_load(ch: LoadChannel, addr: int, overhead: int = 0):
+    """Coupled load: request + blocking response (+ schedule overhead)."""
+    yield Req(ch, addr)
+    v = yield Resp(ch)
+    if overhead:
+        yield Delay(overhead)
+    return v
+
+
+# -- parallel pointer chasing (paper Listings 4 & 5) ------------------------
+
+
+def _roundrobin_chase(
+    load_ch: LoadChannel,
+    state_st: StreamChannel,
+    n_items: int,
+    init_state: Callable[[int], Tuple[Any, int]],
+    step: Callable[[Any, Any], Tuple[bool, int, Any, Any, int]],
+    out_port: str,
+    rif: int,
+):
+    """Listing 4 (right): RIF pointer chains processed round-robin.
+
+    ``init_state(i) -> (state, first_addr)``
+    ``step(state, loaded) -> (done, out_idx, out_val, new_state, next_addr)``
+    Every loop iteration is a single issue slot (II=1).
+    """
+
+    def gen():
+        counters = {"started": 0, "inflight": 0, "finished": 0}
+
+        def on_state_factory():
+            def on_resp(v):
+                def on_state(s):
+                    done, oi, ov, ns, na = step(s, v)
+                    if done:
+                        counters["finished"] += 1
+                        counters["inflight"] -= 1
+                        return Store(out_port, oi, ov)
+                    return Par([Req(load_ch, na), Enq(state_st, ns)])
+                return Fused(Deq(state_st), on_state)
+            return on_resp
+
+        while counters["finished"] < n_items:
+            if counters["inflight"] < rif and counters["started"] < n_items:
+                s0, a0 = init_state(counters["started"])
+                counters["started"] += 1
+                counters["inflight"] += 1
+                yield Par([Req(load_ch, a0), Enq(state_st, s0)])
+            else:
+                yield Fused(Resp(load_ch), on_state_factory())
+
+    return gen
+
+
+def _lockstep_chase(
+    load_ch: LoadChannel,
+    state_st: StreamChannel,
+    n_items: int,
+    iters: int,
+    init_state: Callable[[int], Tuple[Any, int]],
+    fixed_step: Callable[[Any, Any], Tuple[int, Any, Any, int]],
+    out_port: str,
+    chunk: int,
+):
+    """Listing 5: fixed-length chains, CHUNK-wide lock-step.
+
+    ``fixed_step(state, loaded) -> (out_idx, out_val, new_state, next_addr)``
+    — always produces a next address (redundant loads once resolved, as
+    the paper notes), and out_val is stored only after the final
+    iteration.
+    """
+
+    def gen():
+        for c0 in range(0, n_items, chunk):
+            c1 = min(c0 + chunk, n_items)
+            # iteration 0: issue all requests for the chunk
+            for i in range(c0, c1):
+                s0, a0 = init_state(i)
+                yield Par([Req(load_ch, a0), Enq(state_st, s0)])
+            # iterations 1..iters-1: consume + re-request
+            for j in range(1, iters):
+                for _ in range(c0, c1):
+                    def on_resp(v):
+                        def on_state(s):
+                            _, _, ns, na = fixed_step(s, v)
+                            return Par([Req(load_ch, na), Enq(state_st, ns)])
+                        return Fused(Deq(state_st), on_state)
+                    yield Fused(Resp(load_ch), on_resp)
+            # final consume round: store results
+            for _ in range(c0, c1):
+                def on_resp_last(v):
+                    def on_state(s):
+                        oi, ov, _, _ = fixed_step(s, v)
+                        return Store(out_port, oi, ov)
+                    return Fused(Deq(state_st), on_state)
+                yield Fused(Resp(load_ch), on_resp_last)
+
+    return gen
+
+
+def _stream_chase(
+    load_ch: LoadChannel,
+    val_st: StreamChannel,
+    state_st: StreamChannel,
+    n_items: int,
+    total_loads: int,
+    init_state: Callable[[int], Tuple[Any, int]],
+    step: Callable[[Any, Any], Tuple[bool, int, Any, Any, int]],
+    out_port: str,
+    rif: int,
+):
+    """R-HLS Stream: a separate Access unit forwards load responses into a
+    value stream (paper §3.2 / Fig 2a); requires the exact load count up
+    front — the streaming precision requirement the paper highlights."""
+
+    def access_gen():
+        for _ in range(total_loads):
+            yield Fused(Resp(load_ch), lambda v: Enq(val_st, v))
+
+    def exec_gen():
+        counters = {"started": 0, "inflight": 0, "finished": 0}
+        while counters["finished"] < n_items:
+            if counters["inflight"] < rif and counters["started"] < n_items:
+                s0, a0 = init_state(counters["started"])
+                counters["started"] += 1
+                counters["inflight"] += 1
+                yield Par([Req(load_ch, a0), Enq(state_st, s0)])
+            else:
+                def on_v(v):
+                    def on_state(s):
+                        done, oi, ov, ns, na = step(s, v)
+                        if done:
+                            counters["finished"] += 1
+                            counters["inflight"] -= 1
+                            return Store(out_port, oi, ov)
+                        return Par([Req(load_ch, na), Enq(state_st, ns)])
+                    return Fused(Deq(state_st), on_state)
+                yield Fused(Deq(val_st), on_v)
+
+    return access_gen, exec_gen
+
+
+# ---------------------------------------------------------------------------
+# Benchmark: binsearch / binsearch_for
+# ---------------------------------------------------------------------------
+
+
+def _binsearch_phases(data, config, early, latency, rif, mem_factory):
+    arr, keys, n = data["arr"], data["keys"], data["n"]
+    iters_fixed = int(math.ceil(math.log2(n)))
+    mems = {
+        "table": mem_factory("table", list(arr)),
+        "out": FixedLatencyMemory([None] * len(keys), latency),
+    }
+
+    def _mid(lo, hi):
+        return (lo + hi) // 2 if lo < hi else min(lo, n - 1)
+
+    def init_state(i):
+        key = int(keys[i])
+        lo, hi = 0, n
+        return (i, key, lo, hi, -1, 1), _mid(lo, hi)
+
+    def step(s, v):
+        i, key, lo, hi, res, it = s
+        mid = _mid(lo, hi)
+        v = int(v)
+        if early and v == key:
+            return True, i, mid, None, 0
+        if lo < hi:
+            if v <= key:
+                lo = mid + 1
+            else:
+                hi = mid
+        if early:
+            if lo >= hi:
+                return True, i, -1, None, 0
+        elif it >= iters_fixed:
+            return True, i, lo, None, 0
+        return False, 0, 0, (i, key, lo, hi, res, it + 1), _mid(lo, hi)
+
+    def fixed_step(s, v):
+        i, key, lo, hi, res, it = s
+        mid = _mid(lo, hi)
+        v = int(v)
+        if early and v == key and res < 0:
+            res = mid
+        if lo < hi:
+            if v <= key:
+                lo = mid + 1
+            else:
+                hi = mid
+        out = res if early else lo
+        return i, out, (i, key, lo, hi, res, it + 1), _mid(lo, hi)
+
+    ch = LoadChannel("bs_load", capacity=rif + 1, port="table")
+    st = StreamChannel("bs_state", capacity=rif + 1)
+
+    if config in ("vitis", "rhls"):
+        ovh = VITIS_OVH if config == "vitis" else 0
+
+        def gen():
+            for i in range(len(keys)):
+                s, addr = init_state(i)
+                while True:
+                    v = yield from _blocking_load(ch, addr, ovh)
+                    done, oi, ov, s, addr = step(s, v)
+                    if done:
+                        yield Store("out", oi, ov)
+                        break
+        procs = [Process("coupled", gen())]
+    elif config == "vitis_dec":
+        gen = _lockstep_chase(ch, st, len(keys), iters_fixed, init_state,
+                              fixed_step, "out", chunk=min(64, rif))
+        procs = [Process("lockstep", gen(), ii=VITIS_DEC_II)]
+    elif config == "rhls_dec":
+        gen = _roundrobin_chase(ch, st, len(keys), init_state, step, "out", rif)
+        procs = [Process("roundrobin", gen())]
+    elif config == "rhls_stream":
+        if early:
+            res, loads = binsearch_ref(arr, keys, True)
+        else:
+            res, loads = binsearch_ref(arr, keys, False)
+        vst = StreamChannel("bs_vals", capacity=rif + 1)
+        a, e = _stream_chase(ch, vst, st, len(keys), loads, init_state, step,
+                             "out", rif)
+        procs = [Process("access", a()), Process("execute", e())]
+    else:
+        raise ValueError(config)
+
+    expected, golden_loads = binsearch_ref(arr, keys, early)
+
+    def check(result: SimResult) -> bool:
+        got = result.stored_array("out", len(keys))
+        return all(g == e for g, e in zip(got, expected))
+
+    return [DaeProgram(f"binsearch[{config}]", procs)], mems, golden_loads, check
+
+
+# ---------------------------------------------------------------------------
+# Benchmark: hashtable
+# ---------------------------------------------------------------------------
+
+
+def _hashtable_phases(data, config, latency, rif, mem_factory):
+    entries, keys, heads = data["entries"], data["keys"], data["heads"]
+    chain_len = data["chain_len"]
+    mems = {
+        "table": mem_factory("table", list(entries)),
+        "out": FixedLatencyMemory([None] * len(keys), latency),
+    }
+
+    def init_state(i):
+        # hash computation -> head bucket
+        return (i, keys[i]), heads[i]
+
+    def step(s, entry):
+        i, key = s
+        k, v, nxt = entry
+        if k == key:
+            return True, i, v, None, 0
+        if nxt < 0:
+            return True, i, -1, None, 0
+        return False, 0, 0, (i, key), nxt
+
+    def fixed_step(s, entry):
+        # lock-step variant: walk exactly chain_len steps; keep re-loading
+        # the tail once resolved (redundant loads, paper §4.2)
+        if len(s) == 2:
+            s = (s[0], s[1], -1, heads[s[0]])
+        i, key, res, idx = s
+        k, v, nxt = entry
+        if k == key and res < 0:
+            res = v
+        naddr = nxt if nxt >= 0 else idx
+        return i, res, (i, key, res, naddr), naddr
+
+    ch = LoadChannel("ht_load", capacity=rif + 1, port="table")
+    st = StreamChannel("ht_state", capacity=rif + 1)
+
+    if config in ("vitis", "rhls"):
+        ovh = VITIS_OVH if config == "vitis" else 0
+
+        def gen():
+            for i in range(len(keys)):
+                yield Delay(1)  # hash computation
+                s, addr = init_state(i)
+                while True:
+                    v = yield from _blocking_load(ch, addr, ovh)
+                    done, oi, ov, s, addr = step(s, v)
+                    if done:
+                        yield Store("out", oi, ov)
+                        break
+        procs = [Process("coupled", gen())]
+    elif config == "vitis_dec":
+        gen = _lockstep_chase(ch, st, len(keys), chain_len, init_state,
+                              fixed_step, "out", chunk=min(64, rif))
+        procs = [Process("lockstep", gen(), ii=VITIS_DEC_II)]
+    elif config == "rhls_dec":
+        gen = _roundrobin_chase(ch, st, len(keys), init_state, step, "out", rif)
+        procs = [Process("roundrobin", gen())]
+    elif config == "rhls_stream":
+        expected, loads = hashtable_ref(entries, keys, heads)
+        vst = StreamChannel("ht_vals", capacity=rif + 1)
+        a, e = _stream_chase(ch, vst, st, len(keys), loads, init_state, step,
+                             "out", rif)
+        procs = [Process("access", a()), Process("execute", e())]
+    else:
+        raise ValueError(config)
+
+    expected, golden_loads = hashtable_ref(entries, keys, heads)
+
+    def check(result: SimResult) -> bool:
+        got = result.stored_array("out", len(keys))
+        return all(g == e for g, e in zip(got, expected))
+
+    return [DaeProgram(f"hashtable[{config}]", procs)], mems, golden_loads, check
+
+
+# ---------------------------------------------------------------------------
+# Benchmark: spmv (paper Listing 2) — also used by multispmv
+# ---------------------------------------------------------------------------
+
+
+def _spmv_program(rows, cols, val, vec_data, out_data, config, latency, rif,
+                  mem_factory, tag="spmv", store_gate=0):
+    """Build one SPMV DaeProgram writing results to out_data via port 'out'."""
+    nrows = len(rows) - 1
+    nnz = int(rows[-1])
+    row_cnt = [int(rows[i + 1] - rows[i]) for i in range(nrows)]
+
+    # Buffer sizing mirrors the paper's profile-guided approach (§6): the
+    # val responses are consumed one val->vec round trip (~2x latency)
+    # after issue, so that channel's buffer must cover the lag.
+    rows_ch = LoadChannel(f"{tag}_rows", capacity=rif + 1, port="rows")
+    val_ch = LoadChannel(f"{tag}_val", capacity=max(rif + 1, 2 * latency + 8),
+                         port="val")
+    cols_ch = LoadChannel(f"{tag}_cols", capacity=rif + 1, port="cols")
+    vec_ch = LoadChannel(f"{tag}_vec", capacity=max(rif + 1, latency + 8),
+                         port="vec")
+    bounds_exec = StreamChannel(f"{tag}_bexec", capacity=nrows + 2)
+    bounds_addr = StreamChannel(f"{tag}_baddr", capacity=nrows + 2)
+
+    mems = {
+        "rows": mem_factory("rows", list(int(x) for x in rows)),
+        "val": mem_factory("val", list(float(x) for x in val)),
+        "cols": mem_factory("cols", list(int(x) for x in cols)),
+        "vec": mem_factory("vec", vec_data),
+        "out": FixedLatencyMemory(out_data, latency),
+    }
+
+    if config == "vitis":
+        # static schedule: blocking row-pointer loads, FP-II-bound inner loop,
+        # pipeline fill per row; values computed through the arrays.
+        def gen():
+            prev = yield from _blocking_load(rows_ch, 0, 0)
+            for i in range(nrows):
+                b = yield from _blocking_load(rows_ch, i + 1, 0)
+                yield Delay(VITIS_ROW_FILL)
+                s = 0.0
+                for j in range(int(prev), int(b)):
+                    s += val[j] * vec_data[int(cols[j])]
+                    yield Delay(VITIS_FP_II)
+                yield Store("out", i, s)
+                prev = b
+        return DaeProgram(f"{tag}[vitis]", [Process("spmv", gen())]), mems
+
+    gated_addr = config in ("rhls",)  # request loop gated by rows (false dep)
+    exec_ii = VITIS_DEC_II if config == "vitis_dec" else 1
+
+    def p_rows():
+        for i in range(nrows + 1):
+            yield Req(rows_ch, i)
+
+    def p_bounds():
+        prev_cell = {"v": None}
+        for i in range(nrows + 1):
+            def on(v, prev_cell=prev_cell):
+                if prev_cell["v"] is None:
+                    prev_cell["v"] = int(v)
+                    return None
+                cnt = int(v) - prev_cell["v"]
+                prev_cell["v"] = int(v)
+                if gated_addr:
+                    return Par([Enq(bounds_exec, cnt), Enq(bounds_addr, cnt)])
+                return Enq(bounds_exec, cnt)
+            yield Fused(Resp(rows_ch), on)
+
+    def p_addr_gated():
+        # rhls: address generation consumes a row-boundary token per row
+        for i in range(nrows):
+            cnt_cell = {}
+            def on(c, cnt_cell=cnt_cell):
+                cnt_cell["c"] = int(c)
+                return None
+            yield Fused(Deq(bounds_addr), on)
+            for j in range(int(rows[i]), int(rows[i + 1])):
+                yield Par([Req(val_ch, j), Req(cols_ch, j)])
+
+    def p_addr_free():
+        # decoupled: the false dependency through rows is gone (Listing 2 right)
+        for j in range(nnz):
+            yield Par([Req(val_ch, j), Req(cols_ch, j)])
+
+    def p_vec():
+        for j in range(nnz):
+            yield Fused(Resp(cols_ch), lambda c: Req(vec_ch, int(c)))
+
+    def p_exec():
+        for i in range(nrows):
+            cnt = row_cnt[i]
+            if cnt == 0:
+                yield Fused(Deq(bounds_exec), lambda _b, i=i: Store("out", i, 0.0))
+                if store_gate:
+                    yield Delay(store_gate)
+                continue
+            acc = {"s": 0.0}
+            for j in range(cnt):
+                first, lastj = j == 0, j == cnt - 1
+                def on(vals, acc=acc, i=i, lastj=lastj):
+                    v, x = float(vals[0]), float(vals[1])
+                    acc["s"] += v * x
+                    if lastj:
+                        return Store("out", i, acc["s"])
+                    return None
+                subs = [Resp(val_ch), Resp(vec_ch)]
+                if first:
+                    subs.append(Deq(bounds_exec))
+                yield Fused(Par(subs), on)
+            if store_gate:
+                yield Delay(store_gate)
+
+    procs = [
+        Process("rows_req", p_rows()),
+        Process("bounds", p_bounds()),
+        Process("addr", p_addr_gated() if gated_addr else p_addr_free()),
+        Process("vec_req", p_vec()),
+        Process("exec", p_exec(), ii=exec_ii),
+    ]
+    return DaeProgram(f"{tag}[{config}]", procs), mems
+
+
+def _spmv_phases(data, config, latency, rif, mem_factory):
+    rows, cols, val, vec = data["rows"], data["cols"], data["val"], data["vec"]
+    vec_data = list(float(x) for x in vec)
+    out_data = [0.0] * data["nrows"]
+    prog, mems = _spmv_program(rows, cols, val, vec_data, out_data, config,
+                               latency, rif, mem_factory)
+    expected = spmv_ref(rows, cols, val, vec)
+
+    def check(result: SimResult) -> bool:
+        got = np.array(out_data, dtype=np.float64)
+        return bool(np.allclose(got, expected, rtol=1e-9, atol=1e-12))
+
+    golden = data["nnz"]
+    return [(prog, mems)], golden, check
+
+
+# ---------------------------------------------------------------------------
+# Benchmark: mergesort / mergesort_opt (paper Listing 3)
+# ---------------------------------------------------------------------------
+
+
+def _merge_pass_program(src_data, dst_data, n, width, config, latency, rif,
+                        mem_factory, src_port, dst_port):
+    """One bottom-up pass: merge width-runs of src into 2*width-runs of dst."""
+    merges = []
+    lo = 0
+    while lo < n:
+        merges.append((lo, min(lo + width, n), min(lo + 2 * width, n)))
+        lo += 2 * width
+
+    # Vitis burst_maxi: only one request/response pair outstanding per
+    # pointer at a time for data-dependent consumption order (§5.2)
+    cap = 1 if config == "vitis_dec" else rif + 1
+    i_ch = LoadChannel(f"ms_i_{src_port}", capacity=cap, port=src_port)
+    j_ch = LoadChannel(f"ms_j_{src_port}", capacity=cap, port=src_port)
+
+    mems = {
+        src_port: mem_factory(src_port, src_data),
+        dst_port: mem_factory(dst_port, dst_data),
+    }
+
+    if config in ("vitis", "rhls"):
+        ovh = VITIS_OVH if config == "vitis" else 0
+
+        def gen():
+            for (l, r, e) in merges:
+                i, j = l, r
+                for k in range(l, e):
+                    reqs, resps = [], []
+                    if i < r:
+                        reqs.append(Req(i_ch, i))
+                        resps.append(Resp(i_ch))
+                    if j < e:
+                        reqs.append(Req(j_ch, j))
+                        resps.append(Resp(j_ch))
+                    yield Par(reqs)
+                    vals = yield Par(resps)
+                    if ovh:
+                        yield Delay(ovh)
+                    vi = vals[0] if i < r else None
+                    vj = vals[-1] if j < e else None
+                    if j >= e or (i < r and vi <= vj):
+                        yield Store(dst_port, k, vi)
+                        i += 1
+                    else:
+                        yield Store(dst_port, k, vj)
+                        j += 1
+        return DaeProgram(f"merge[{config}]", [Process("merge", gen())]), mems
+
+    # decoupled variants: request loops run ahead across the whole pass
+    def p_req_i():
+        for (l, r, e) in merges:
+            for idx in range(l, r):
+                yield Req(i_ch, idx)
+
+    def p_req_j():
+        for (l, r, e) in merges:
+            for idx in range(r, e):
+                yield Req(j_ch, idx)
+
+    def p_merge():
+        for (l, r, e) in merges:
+            ni, nj = r - l, e - r
+            state = {"hi": None, "hj": None, "ti": 0, "tj": 0}
+
+            def pick_and_store(k, state=state):
+                hi, hj = state["hi"], state["hj"]
+                i_alive = hi is not None
+                j_alive = hj is not None
+                if i_alive and (not j_alive or hi <= hj):
+                    state["hi"] = None
+                    return Store(dst_port, k, hi)
+                state["hj"] = None
+                return Store(dst_port, k, hj)
+
+            for k in range(l, e):
+                need_i = state["hi"] is None and state["ti"] < ni
+                need_j = state["hj"] is None and state["tj"] < nj
+                if need_i and need_j:
+                    def on_both(vals, k=k, state=state):
+                        state["hi"], state["hj"] = vals
+                        state["ti"] += 1
+                        state["tj"] += 1
+                        return pick_and_store(k)
+                    yield Fused(Par([Resp(i_ch), Resp(j_ch)]), on_both)
+                elif need_i:
+                    def on_i(v, k=k, state=state):
+                        state["hi"] = v
+                        state["ti"] += 1
+                        return pick_and_store(k)
+                    yield Fused(Resp(i_ch), on_i)
+                elif need_j:
+                    def on_j(v, k=k, state=state):
+                        state["hj"] = v
+                        state["tj"] += 1
+                        return pick_and_store(k)
+                    yield Fused(Resp(j_ch), on_j)
+                else:
+                    yield pick_and_store(k)
+
+    ii = VITIS_DEC_II if config == "vitis_dec" else 1
+    procs = [
+        Process("req_i", p_req_i()),
+        Process("req_j", p_req_j()),
+        Process("merge", p_merge(), ii=ii),
+    ]
+    return DaeProgram(f"merge[{config}]", procs), mems
+
+
+def _copy_pass_program(src_data, dst_data, n, config, latency, rif,
+                       mem_factory, src_port, dst_port):
+    ch = LoadChannel(f"cp_{src_port}", capacity=rif + 1, port=src_port)
+    mems = {
+        src_port: mem_factory(src_port, src_data),
+        dst_port: mem_factory(dst_port, dst_data),
+    }
+    if config in ("vitis",):
+        def gen():
+            yield Delay(latency)  # burst fill
+            for k in range(n):
+                yield Delay(2)
+                yield Store(dst_port, k, src_data[k])
+        return DaeProgram("copy[vitis]", [Process("copy", gen())]), mems
+
+    def p_req():
+        for k in range(n):
+            yield Req(ch, k)
+
+    def p_copy():
+        for k in range(n):
+            yield Fused(Resp(ch), lambda v, k=k: Store(dst_port, k, v))
+
+    ii = VITIS_DEC_II if config == "vitis_dec" else 1
+    return (
+        DaeProgram(f"copy[{config}]",
+                   [Process("req", p_req()), Process("copy", p_copy(), ii=ii)]),
+        mems,
+    )
+
+
+def _mergesort_phases(data, config, opt, latency, rif, mem_factory):
+    n = data["n"]
+    table = [int(x) for x in data["table"]]
+    result = [0] * n
+
+    if config == "rhls_stream":
+        # The disambiguation scheme couples the two fetch loops through one
+        # shared in-order queue; once run width exceeds the queue capacity
+        # the merge needs the j-run head while i-run values block the
+        # queue -> structural deadlock (paper §6).  We reproduce the
+        # detection rather than modelling the hang.
+        def phases():
+            raise DeadlockError(
+                "R-HLS Stream mergesort: shared disambiguation queue between "
+                "the two fetch loops deadlocks (paper §6)")
+        return phases, None, None
+
+    phases = []
+    width = 1
+    src, dst = table, result
+    src_port, dst_port = "table", "result"
+    while width < n:
+        phases.append(("merge", src, dst, width, src_port, dst_port))
+        if opt:
+            src, dst = dst, src
+            src_port, dst_port = dst_port, src_port
+        else:
+            phases.append(("copy", dst, src, None, dst_port, src_port))
+        width *= 2
+
+    passes = len([p for p in phases if p[0] == "merge"])
+    golden = n * passes
+    expected = np.sort(data["table"])
+    final_holder = src  # after the loop, src holds the sorted data
+
+    def build():
+        out = []
+        for kind, s, d, w, sp, dp in phases:
+            if kind == "merge":
+                out.append(_merge_pass_program(s, d, n, w, config, latency,
+                                               rif, mem_factory, sp, dp))
+            else:
+                out.append(_copy_pass_program(s, d, n, config, latency, rif,
+                                              mem_factory, sp, dp))
+        return out
+
+    def check(_result) -> bool:
+        got = np.array(final_holder, dtype=np.int64)
+        return bool(np.array_equal(got, expected))
+
+    return build, golden, check
+
+
+# ---------------------------------------------------------------------------
+# Benchmark: multispmv
+# ---------------------------------------------------------------------------
+
+
+def _multispmv_phases(data, config, latency, rif, mem_factory):
+    rows, cols, val = data["rows"], data["cols"], data["val"]
+    nrows, nnz, iters, alpha = (data["nrows"], data["nnz"], data["iters"],
+                                data["alpha"])
+    vec_data = [float(x) for x in data["vec"]]
+    out_data = [0.0] * nrows
+    store_gate = RHLS_STORE_GATE if config == "rhls" else 0
+
+    def build():
+        progs = []
+        for it in range(iters):
+            progs.append(_spmv_program(rows, cols, val, vec_data, out_data,
+                                       config, latency, rif, mem_factory,
+                                       tag=f"mspmv{it}", store_gate=store_gate))
+            progs.append(_scale_copy_program(out_data, vec_data, nrows, alpha,
+                                             config, latency, rif, mem_factory))
+        return progs
+
+    expected = multispmv_ref(rows, cols, val, data["vec"], iters, alpha)
+    golden = iters * nnz
+
+    def check(_r) -> bool:
+        got = np.array(vec_data, dtype=np.float64)
+        return bool(np.allclose(got, expected, rtol=1e-9, atol=1e-12))
+
+    return build, golden, check
+
+
+def _scale_copy_program(out_data, vec_data, n, alpha, config, latency, rif,
+                        mem_factory):
+    ch = LoadChannel("msc_out", capacity=rif + 1, port="outr")
+    mems = {
+        "outr": mem_factory("outr", out_data),
+        "vecw": mem_factory("vecw", vec_data),
+    }
+    if config == "vitis":
+        def gen():
+            yield Delay(latency)
+            for k in range(n):
+                yield Delay(2)
+                yield Store("vecw", k, out_data[k] * alpha)
+            yield StoreWait("vecw")
+        return DaeProgram("scalecopy[vitis]", [Process("copy", gen())]), mems
+
+    def p_req():
+        for k in range(n):
+            yield Req(ch, k)
+
+    def p_copy():
+        for k in range(n):
+            yield Fused(Resp(ch), lambda v, k=k: Store("vecw", k, float(v) * alpha))
+        yield StoreWait("vecw")
+
+    ii = VITIS_DEC_II if config == "vitis_dec" else 1
+    extra_hop = 1 if config == "rhls_stream" else 0
+
+    def p_copy_stream():
+        vst = StreamChannel("msc_vst", capacity=rif + 1)
+        # emulated as II=2: resp->enq then deq->store in one unit
+        for k in range(n):
+            v = yield Resp(ch)
+            yield Store("vecw", k, float(v) * alpha)
+        yield StoreWait("vecw")
+
+    copy_proc = (Process("copy", p_copy_stream()) if extra_hop
+                 else Process("copy", p_copy(), ii=ii))
+    return (DaeProgram(f"scalecopy[{config}]",
+                       [Process("req", p_req()), copy_proc]), mems)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WorkloadReport:
+    benchmark: str
+    config: str
+    scale: str
+    cycles: int
+    golden: int
+    overhead: float          # cycles/golden - 1
+    correct: bool
+    mem_reads: Dict[str, int]
+
+    @property
+    def speedup_base(self) -> Optional[float]:
+        return None
+
+
+def _mem_factory_for(kind: str, latency: int, max_outstanding: Optional[int],
+                     moms_ports: Sequence[str]):
+    """``max_outstanding=None`` -> the paper's defaults: the abstract
+    fixed-latency Verilator model is unbounded, the MOMS AXI interface
+    allows 64 outstanding reads (§6)."""
+
+    def make(port: str, data: Any) -> MemoryModel:
+        if kind == "moms" and port in moms_ports:
+            return MomsMemory(data, max_outstanding=max_outstanding or 64)
+        return FixedLatencyMemory(
+            data, latency=latency,
+            max_outstanding=max_outstanding or 1_000_000_000)
+    return make
+
+
+# ports holding the irregularly accessed data (paper: MOMS only for these)
+MOMS_PORTS = {
+    "binsearch": ("table",),
+    "binsearch_for": ("table",),
+    "hashtable": ("table",),
+    "spmv": ("vec",),
+    "multispmv": ("vec",),
+    "mergesort": ("table", "result"),
+    "mergesort_opt": ("table", "result"),
+}
+
+
+def run_workload(
+    benchmark: str,
+    config: str,
+    scale: str = "paper",
+    mem: str = "fixed",
+    latency: int = 100,
+    rif: int = 128,
+    max_outstanding: Optional[int] = None,
+    seed: int = 0,
+) -> WorkloadReport:
+    """Build and simulate one (benchmark, config) cell of Table 1/3."""
+    if config not in CONFIGS:
+        raise ValueError(f"unknown config {config!r}")
+    mem_factory = _mem_factory_for(mem, latency, max_outstanding,
+                                   MOMS_PORTS.get(benchmark, ()))
+
+    if benchmark in ("binsearch", "binsearch_for"):
+        data = make_binsearch_data(scale, seed)
+        early = benchmark == "binsearch"
+        progs, mems, golden, check = _binsearch_phases(
+            data, config, early, latency, rif, mem_factory)
+        total = 0
+        result = None
+        for prog in progs:
+            result = simulate(prog, mems)
+            total += result.cycles
+        reads = {p: m.reads for p, m in mems.items()}
+        return WorkloadReport(benchmark, config, scale, total, golden,
+                              total / golden - 1, check(result), reads)
+
+    if benchmark == "hashtable":
+        data = make_hashtable_data(scale, seed)
+        progs, mems, golden, check = _hashtable_phases(
+            data, config, latency, rif, mem_factory)
+        total = 0
+        result = None
+        for prog in progs:
+            result = simulate(prog, mems)
+            total += result.cycles
+        reads = {p: m.reads for p, m in mems.items()}
+        return WorkloadReport(benchmark, config, scale, total, golden,
+                              total / golden - 1, check(result), reads)
+
+    if benchmark == "spmv":
+        data = make_spmv_data(scale if scale != "paper" else "paper", seed)
+        cells, golden, check = _spmv_phases(data, config, latency, rif,
+                                            mem_factory)
+        total = 0
+        reads: Dict[str, int] = {}
+        for prog, mems in cells:
+            r = simulate(prog, mems)
+            total += r.cycles
+            for p, m in mems.items():
+                reads[p] = reads.get(p, 0) + m.reads
+        return WorkloadReport(benchmark, config, scale, total, golden,
+                              total / golden - 1, check(None), reads)
+
+    if benchmark in ("mergesort", "mergesort_opt"):
+        data = make_mergesort_data(scale, seed)
+        opt = benchmark == "mergesort_opt"
+        build, golden, check = _mergesort_phases(data, config, opt, latency,
+                                                 rif, mem_factory)
+        if golden is None:  # rhls_stream structural deadlock
+            build()  # raises DeadlockError
+        total = 0
+        reads = {}
+        for prog, mems in build():
+            r = simulate(prog, mems)
+            total += r.cycles
+            for p, m in mems.items():
+                reads[p] = reads.get(p, 0) + m.reads
+        return WorkloadReport(benchmark, config, scale, total, golden,
+                              total / golden - 1, check(None), reads)
+
+    if benchmark == "multispmv":
+        data = make_multispmv_data("paper" if scale in ("paper", "fig4") else scale,
+                                   seed)
+        build, golden, check = _multispmv_phases(data, config, latency, rif,
+                                                 mem_factory)
+        total = 0
+        reads = {}
+        for prog, mems in build():
+            r = simulate(prog, mems)
+            total += r.cycles
+            for p, m in mems.items():
+                reads[p] = reads.get(p, 0) + m.reads
+        return WorkloadReport(benchmark, config, scale, total, golden,
+                              total / golden - 1, check(None), reads)
+
+    raise ValueError(f"unknown benchmark {benchmark!r}")

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticLM
+from repro.data.loader import PrefetchLoader
+
+__all__ = ["SyntheticLM", "PrefetchLoader"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+Each subpackage has kernel.py (pl.pallas_call + BlockSpec), ops.py (the
+jit'd public wrapper) and ref.py (the pure-jnp oracle used by tests and
+the dry-run):
+
+  dae_gather      decoupled row gather (scalar-prefetch + RIF DMA ring)
+  dae_spmv        BSR sparse matvec (paper Listing 2, TPU block form)
+  dae_merge       merge-path + bitonic merge (paper Listing 3)
+  dae_chase       parallel pointer chasing ops (paper Listings 4/5)
+  flash_attention block-streamed attention + (paged) decode
+  grouped_matmul  MoE expert GEMM with scalar-prefetched group stream
+"""

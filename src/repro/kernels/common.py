@@ -1,0 +1,37 @@
+"""Shared helpers for the Pallas kernel layer.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with ``interpret=True``.  ``resolve_interpret`` picks
+interpret mode automatically when no explicit choice is given.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+__all__ = ["cdiv", "round_up", "resolve_interpret", "MXU_LANE", "VMEM_BYTES"]
+
+# TPU v5e hardware shape constants (see benchmarks/hw.py for the full set)
+MXU_LANE = 128          # lane dimension granularity
+SUBLANE = 8             # float32 sublane granularity
+VMEM_BYTES = 128 * 2**20  # ~128 MiB VMEM per core (v5e: 128MB unified)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Explicit flag wins; else interpret everywhere except real TPU."""
+    if interpret is not None:
+        return interpret
+    if os.environ.get("REPRO_FORCE_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,5 @@
+from repro.kernels.dae_chase.ops import batched_searchsorted, hash_lookup
+from repro.kernels.dae_chase.ref import searchsorted_ref, hash_lookup_ref
+
+__all__ = ["batched_searchsorted", "hash_lookup", "searchsorted_ref",
+           "hash_lookup_ref"]

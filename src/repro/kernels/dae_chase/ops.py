@@ -1,0 +1,116 @@
+"""Parallel pointer chasing (paper §4.2, Listings 4/5) on TPU.
+
+Hardware adaptation (DESIGN.md §2/§8): an FPGA follows one pointer per
+chain per memory response; a TPU fetches 512-byte DMA granules.  Two
+consequences drive the design:
+
+* **binsearch** becomes a *block* search: every probe fetches a whole
+  128-wide block of the sorted table (via the decoupled gather kernel),
+  which resolves log2(128) = 7 levels of the search in one response.
+  The chase loop is the lock-step CHUNK-wide variant (Listing 5): all B
+  keys advance one level per round, with the gather's scalar-prefetch
+  stream as the decoupled request channel.
+
+* **hashtable** keeps the chain-walk structure, but walks B chains in
+  lock-step with masking (a resolved chain keeps re-requesting its tail,
+  exactly like the paper's fixed-length variant keeps issuing redundant
+  loads rather than adding conditional-issue circuitry).
+
+Both ops are compositions: jax.lax control flow (the Execute loop) over
+the dae_gather Pallas kernel (the decoupled Access engine).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.dae_gather.ops import dae_gather
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "method"))
+def _searchsorted_impl(table, keys, *, block, interpret, method):
+    n = table.shape[0]
+    if method == "ref":
+        return jnp.searchsorted(table, keys, side="right").astype(jnp.int32)
+
+    big = (jnp.inf if jnp.issubdtype(table.dtype, jnp.floating)
+           else jnp.iinfo(table.dtype).max)
+    np_ = round_up(max(n, 1), block)
+    tp = jnp.concatenate([table, jnp.full((np_ - n,), big, table.dtype)])
+    tiles = tp.reshape(-1, block)          # (NB, block)
+    n_blocks = tiles.shape[0]
+
+    # level-0 summary: first element of each block (table is sorted)
+    summary = tiles[:, 0]                   # (NB,)
+    # block id per key: last block whose min <= key  (searchsorted on the
+    # small summary is VMEM-resident compute — the top of the B-tree)
+    blk = jnp.clip(jnp.searchsorted(summary, keys, side="right") - 1,
+                   0, n_blocks - 1).astype(jnp.int32)
+
+    # decoupled probe: fetch each key's block (the irregular access)
+    rows = dae_gather(tiles, blk, method="pipelined", interpret=interpret)
+    within = jnp.sum(rows <= keys[:, None], axis=1).astype(jnp.int32)
+    idx = blk * block + within
+    return jnp.minimum(idx, n).astype(jnp.int32)
+
+
+def batched_searchsorted(table: jax.Array, keys: jax.Array, *,
+                         block: int = 128, method: str = "pallas",
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """'right' insertion points of ``keys`` in sorted ``table`` via
+    decoupled block probes."""
+    return _searchsorted_impl(table, keys, block=block,
+                              interpret=resolve_interpret(interpret),
+                              method=method)
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "interpret", "method"))
+def _hash_lookup_impl(entry_keys, entry_vals, entry_next, heads, keys, *,
+                      max_steps, interpret, method):
+    from repro.kernels.dae_chase.ref import hash_lookup_ref
+    if method == "ref":
+        return hash_lookup_ref(entry_keys, entry_vals, entry_next, heads,
+                               keys, max_steps)
+
+    n = entry_keys.shape[0]
+    # pack (key, val, next) into rows so one decoupled gather fetches a
+    # full entry; lane padding inside dae_gather keeps it DMA-aligned
+    packed = jnp.stack([entry_keys.astype(jnp.int32),
+                        entry_vals.astype(jnp.int32),
+                        entry_next.astype(jnp.int32)], axis=1)  # (N, 3)
+
+    b = heads.shape[0]
+
+    def step(state, _):
+        idx, found, val = state
+        safe = jnp.clip(idx, 0, n - 1)
+        ent = dae_gather(packed, safe, method="pipelined",
+                         interpret=interpret)           # (B, 3)
+        k, v, nxt = ent[:, 0], ent[:, 1], ent[:, 2]
+        alive = (idx >= 0) & ~found
+        hit = alive & (k == keys)
+        val = jnp.where(hit, v, val)
+        found = found | hit
+        idx = jnp.where(alive & ~hit, nxt, idx)
+        return (idx, found, val), None
+
+    init = (heads.astype(jnp.int32), jnp.zeros(b, bool),
+            jnp.full(b, -1, jnp.int32))
+    (idx, found, val), _ = jax.lax.scan(step, init, None, length=max_steps)
+    return jnp.where(found, val, -1)
+
+
+def hash_lookup(entry_keys: jax.Array, entry_vals: jax.Array,
+                entry_next: jax.Array, heads: jax.Array, keys: jax.Array, *,
+                max_steps: int = 16, method: str = "pallas",
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Lock-step parallel chain walk over a separate-chaining hash table."""
+    return _hash_lookup_impl(entry_keys, entry_vals, entry_next, heads, keys,
+                             max_steps=max_steps,
+                             interpret=resolve_interpret(interpret),
+                             method=method)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the pointer-chasing ops."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def searchsorted_ref(table: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Index of the first element > key (i.e. 'right' insertion point)."""
+    return jnp.searchsorted(table, keys, side="right").astype(jnp.int32)
+
+
+def hash_lookup_ref(entry_keys, entry_vals, entry_next, heads, keys,
+                    max_steps: int) -> jnp.ndarray:
+    """Walk separate-chaining buckets; -1 when not found in max_steps."""
+    import jax
+
+    def step(state, _):
+        idx, found, val = state
+        safe = jnp.clip(idx, 0, entry_keys.shape[0] - 1)
+        k = entry_keys[safe]
+        v = entry_vals[safe]
+        nxt = entry_next[safe]
+        alive = (idx >= 0) & ~found
+        hit = alive & (k == keys)
+        val = jnp.where(hit, v, val)
+        found = found | hit
+        idx = jnp.where(alive & ~hit, nxt, idx)
+        return (idx, found, val), None
+
+    n = heads.shape[0]
+    init = (heads.astype(jnp.int32), jnp.zeros(n, bool),
+            jnp.full(n, -1, entry_vals.dtype))
+    (idx, found, val), _ = jax.lax.scan(step, init, None, length=max_steps)
+    return jnp.where(found, val, -1)

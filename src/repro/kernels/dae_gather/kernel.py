@@ -1,0 +1,140 @@
+"""Decoupled row gather — the TPU realization of the paper's decoupled load.
+
+Two variants, mirroring the two decoupling mechanisms in DESIGN.md §2:
+
+* ``gather_pipelined`` — the *scalar-prefetch* form.  The index vector is
+  prefetched to SMEM (`PrefetchScalarGridSpec`), so the Pallas pipeline's
+  DMA-issue stage knows the HBM address of step *i*'s row several grid
+  steps before the compute stage consumes it.  This is
+  ``decouple_request`` (issue) / ``decouple_response`` (kernel body)
+  with the buffer ring as the RIF window — Pallas double-buffers, so
+  RIF=2 blocks in flight.
+
+* ``gather_rif`` — the *manual multi-buffer DMA* form (Listing 4's RIF
+  generalization).  The kernel body issues ``rif`` async HBM→VMEM copies
+  ahead of consumption through a rotating scratch ring with per-slot DMA
+  semaphores.  Every request is matched by exactly one wait (the paper's
+  §5.1 conservation rule, structurally enforced), and capacity is the
+  ring depth — deadlock-free by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+
+
+# ---------------------------------------------------------------------------
+# Variant 1: scalar-prefetch pipelined gather
+# ---------------------------------------------------------------------------
+
+
+def _gather_block_kernel(idx_ref, table_ref, out_ref):
+    # The response side: the block for row idx[i] has already been DMA'd
+    # into VMEM by the pipeline; consuming it is a plain copy.
+    out_ref[...] = table_ref[...]
+
+
+def gather_pipelined(table: jax.Array, idx: jax.Array, *, block_d: int,
+                     rows_per_step: int = 1, interpret: bool = True) -> jax.Array:
+    """Gather ``table[idx]`` with one (rows_per_step, block_d) block per
+    grid step.  ``idx`` must already be padded to a multiple of
+    rows_per_step (ops.py handles that); indices must be pre-scaled to
+    *block-row* units when rows_per_step > 1."""
+    m = idx.shape[0]
+    n, d = table.shape
+    assert d % block_d == 0, (d, block_d)
+    assert m % rows_per_step == 0
+    grid = (m // rows_per_step, d // block_d)
+
+    return pl.pallas_call(
+        _gather_block_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((rows_per_step, block_d),
+                             lambda i, j, idx_ref: (idx_ref[i], j)),
+            ],
+            out_specs=pl.BlockSpec((rows_per_step, block_d),
+                                   lambda i, j, idx_ref: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)
+
+
+# ---------------------------------------------------------------------------
+# Variant 2: manual multi-buffer DMA gather (explicit RIF)
+# ---------------------------------------------------------------------------
+
+
+def _gather_rif_kernel(idx_ref, table_hbm, out_ref, scratch, sems, *,
+                       chunk: int, rif: int):
+    """Process ``chunk`` rows per grid step with ``rif`` copies in flight.
+
+    Access loop  = cp.start() on slot k % rif   (decouple_request)
+    Execute loop = cp.wait() + copy-out         (decouple_response)
+    """
+    c = pl.program_id(0)
+    base = c * chunk
+
+    def _copy(k, slot):
+        row = idx_ref[base + k]
+        return pltpu.make_async_copy(
+            table_hbm.at[pl.ds(row, 1), :], scratch.at[pl.ds(slot, 1), :],
+            sems.at[slot])
+
+    # prologue: fill the ring (issue min(rif, chunk) requests)
+    def _issue(k, _):
+        _copy(k, k % rif).start()
+        return 0
+
+    n_pro = min(rif, chunk)
+    jax.lax.fori_loop(0, n_pro, _issue, 0)
+
+    # steady state: wait k, consume k, issue k + rif
+    def _consume(k, _):
+        slot = k % rif
+        _copy(k, slot).wait()
+        val = scratch[pl.ds(slot, 1), :]
+        pl.store(out_ref, (pl.ds(k, 1), slice(None)), val)
+
+        @pl.when(k + rif < chunk)
+        def _():
+            _copy(k + rif, (k + rif) % rif).start()
+
+        return 0
+
+    jax.lax.fori_loop(0, chunk, _consume, 0)
+
+
+def gather_rif(table: jax.Array, idx: jax.Array, *, chunk: int = 64,
+               rif: int = 8, interpret: bool = True) -> jax.Array:
+    m = idx.shape[0]
+    n, d = table.shape
+    assert m % chunk == 0
+    grid = (m // chunk,)
+
+    kernel = functools.partial(_gather_rif_kernel, chunk=chunk, rif=rif)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec((chunk, d), lambda c, idx_ref: (c, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rif, d), table.dtype),
+                pltpu.SemaphoreType.DMA((rif,)),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)

@@ -1,0 +1,75 @@
+"""Jit'd public wrapper for the decoupled gather kernel.
+
+Handles shape padding, method dispatch, and the ref fallback used by the
+dry-run path (``method='ref'``) where the compiled HLO must reflect the
+XLA gather the roofline accounts for.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.dae_gather import kernel as _k
+from repro.kernels.dae_gather.ref import gather_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("method", "block_d", "chunk", "rif", "interpret"))
+def _dae_gather_impl(table, idx, *, method, block_d, chunk, rif, interpret):
+    n, d = table.shape
+    m = idx.shape[0]
+    idx = idx.astype(jnp.int32)
+
+    if method == "ref":
+        return gather_ref(table, idx)
+
+    # pad the feature dim to the lane granularity the kernels require
+    dp = round_up(d, 128)
+    if dp != d:
+        table = jnp.pad(table, ((0, 0), (0, dp - d)))
+
+    if method == "pipelined":
+        bd = block_d or min(dp, 512)
+        bd = dp // max(1, dp // bd)  # ensure divisibility
+        while dp % bd:
+            bd -= 1
+        out = _k.gather_pipelined(table, idx, block_d=bd, interpret=interpret)
+    elif method == "rif":
+        c = min(chunk, m) or 1
+        mp = round_up(m, c)
+        if mp != m:
+            idx = jnp.pad(idx, (0, mp - m))
+        out = _k.gather_rif(table, idx, chunk=c, rif=min(rif, c),
+                            interpret=interpret)
+        out = out[:m]
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    return out[:, :d]
+
+
+def dae_gather(
+    table: jax.Array,
+    idx: jax.Array,
+    *,
+    method: str = "pipelined",
+    block_d: Optional[int] = None,
+    chunk: int = 64,
+    rif: int = 8,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Decoupled gather of ``table`` (N, D) rows at ``idx`` (M,) -> (M, D).
+
+    method='pipelined': scalar-prefetch indexed BlockSpec (RIF = pipeline
+    double-buffering); method='rif': explicit multi-buffer DMA ring with
+    ``rif`` requests in flight; method='ref': jnp oracle (XLA gather).
+    """
+    return _dae_gather_impl(table, idx, method=method, block_d=block_d,
+                            chunk=chunk, rif=rif,
+                            interpret=resolve_interpret(interpret))

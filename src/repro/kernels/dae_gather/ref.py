@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the decoupled gather kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather rows of ``table`` (N, D) at ``idx`` (M,) -> (M, D)."""
+    return jnp.take(table, idx, axis=0)

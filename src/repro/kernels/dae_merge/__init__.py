@@ -1,0 +1,4 @@
+from repro.kernels.dae_merge.ops import merge_sorted, merge_sort
+from repro.kernels.dae_merge.ref import merge_ref, sort_ref
+
+__all__ = ["merge_sorted", "merge_sort", "merge_ref", "sort_ref"]

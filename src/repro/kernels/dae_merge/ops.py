@@ -1,0 +1,113 @@
+"""Merge-path split computation + public merge/sort wrappers."""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.dae_merge import kernel as _k
+
+
+def _sentinel(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def merge_path_splits(a: jax.Array, b: jax.Array, tile: int, n_tiles: int):
+    """For each output diagonal k = t*tile, find ia = the number of
+    elements taken from ``a`` among the first k merged elements (ties take
+    from a first).  Vectorized binary search: ia is the smallest i in
+    [max(0, k-m), min(k, n)] with a[i] > b[k-i-1]."""
+    n, m = a.shape[0], b.shape[0]
+    ks = jnp.arange(n_tiles, dtype=jnp.int32) * tile
+    lo = jnp.maximum(0, ks - m).astype(jnp.int32)
+    hi = jnp.minimum(ks, n).astype(jnp.int32)
+
+    big = _sentinel(a.dtype)
+    a_pad = jnp.concatenate([a, jnp.full((1,), big, a.dtype)])
+    b_pad = jnp.concatenate([b, jnp.full((1,), big, b.dtype)])
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        av = a_pad[jnp.minimum(mid, n)]
+        bk = ks - mid - 1
+        bv = jnp.where(bk >= 0, b_pad[jnp.clip(bk, 0, m - 1)],
+                       jnp.full_like(b_pad[0], -jnp.inf)
+                       if jnp.issubdtype(b.dtype, jnp.floating)
+                       else jnp.iinfo(b.dtype).min)
+        take_a = av <= bv  # a[mid] <= b[k-mid-1] -> split is right of mid
+        lo = jnp.where((lo < hi) & take_a, mid + 1, lo)
+        hi = jnp.where((lo <= hi) & ~take_a, jnp.minimum(hi, mid), hi)
+        return lo, hi
+
+    steps = max(1, math.ceil(math.log2(max(n + m, 2))) + 1)
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    ia = lo
+    ib = ks - ia
+    return ia.astype(jnp.int32), ib.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret", "method"))
+def _merge_impl(a, b, *, tile, interpret, method):
+    n, m = a.shape[0], b.shape[0]
+    total = n + m
+    if method == "ref":
+        return jnp.sort(jnp.concatenate([a, b]))
+    n_tiles = cdiv(total, tile)
+    ia, ib = merge_path_splits(a, b, tile, n_tiles)
+    big = _sentinel(a.dtype)
+    # pad so every (start, start+tile) window is in bounds
+    a_pad = jnp.concatenate([a, jnp.full((tile,), big, a.dtype)])
+    b_pad = jnp.concatenate([b, jnp.full((tile,), big, b.dtype)])
+    out = _k.merge_tiles(a_pad, b_pad, ia, ib, n_tiles * tile, tile=tile,
+                         interpret=interpret)
+    return out[:total]
+
+
+def merge_sorted(a: jax.Array, b: jax.Array, *, tile: int = 256,
+                 method: str = "pallas",
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Merge two sorted 1-D arrays (decoupled merge-path kernel)."""
+    if a.dtype != b.dtype:
+        raise TypeError(f"dtype mismatch: {a.dtype} vs {b.dtype}")
+    tile = min(tile, 1 << max(1, (a.shape[0] + b.shape[0] - 1).bit_length()))
+    # tile must be a power of two for the bitonic network
+    tile = 1 << (tile.bit_length() - 1)
+    return _merge_impl(a, b, tile=tile, interpret=resolve_interpret(interpret),
+                       method=method)
+
+
+def merge_sort(x: jax.Array, *, tile: int = 256, method: str = "pallas",
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Bottom-up mergesort built from the decoupled merge unit — the
+    paper's mergesort benchmark in TPU form.  The ping-pong between
+    passes is the mergesort_opt optimization (no copy loop, §4.1)."""
+    n = x.shape[0]
+    width = tile
+    # sort tiles locally first (one bitonic pass per tile via jnp.sort on
+    # a reshaped view keeps the host loop short)
+    np_ = round_up(n, tile)
+    big = _sentinel(x.dtype)
+    xp = jnp.concatenate([x, jnp.full((np_ - n,), big, x.dtype)])
+    xp = jnp.sort(xp.reshape(-1, tile), axis=1).reshape(-1)
+    while width < np_:
+        pieces = []
+        for lo in range(0, np_, 2 * width):
+            a = xp[lo: lo + width]
+            e = min(lo + 2 * width, np_)
+            b = xp[lo + width: e]
+            if b.shape[0] == 0:
+                pieces.append(a)
+            else:
+                pieces.append(merge_sorted(a, b, tile=tile, method=method,
+                                           interpret=interpret))
+        xp = jnp.concatenate(pieces)
+        width *= 2
+    return xp[:n]

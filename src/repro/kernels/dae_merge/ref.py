@@ -1,0 +1,14 @@
+"""Pure-jnp oracles for the decoupled merge kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Merge two sorted 1-D arrays into one sorted array."""
+    return jnp.sort(jnp.concatenate([a, b]))
+
+
+def sort_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sort(x)

@@ -1,0 +1,4 @@
+from repro.kernels.dae_spmv.ops import dae_spmv, csr_to_bsr
+from repro.kernels.dae_spmv.ref import spmv_ref, bsr_spmv_ref
+
+__all__ = ["dae_spmv", "csr_to_bsr", "spmv_ref", "bsr_spmv_ref"]

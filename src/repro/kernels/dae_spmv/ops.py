@@ -1,0 +1,76 @@
+"""Jit'd wrappers + CSR->BSR conversion for the decoupled SPMV kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.dae_spmv import kernel as _k
+from repro.kernels.dae_spmv.ref import bsr_spmv_ref
+
+
+def csr_to_bsr(rows: np.ndarray, cols: np.ndarray, val: np.ndarray,
+               ncols: int, bm: int = 8, bk: int = 128
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int]:
+    """Convert scalar CSR to BSR blocks of (bm, bk).
+
+    Returns (val_blocks (NB,bm,bk), row_ids (NB,), col_ids (NB,),
+    vec_pad_to (KB*bk,), nrows_blocks).  Every block-row gets at least one
+    (possibly zero) block so the kernel's output-initialization contract
+    holds; blocks are emitted in (block_row, block_col) order.
+    """
+    nrows = len(rows) - 1
+    nrb = cdiv(nrows, bm)
+    nkb = cdiv(ncols, bk)
+    blocks = {}
+    for i in range(nrows):
+        for p in range(int(rows[i]), int(rows[i + 1])):
+            j = int(cols[p])
+            key = (i // bm, j // bk)
+            blk = blocks.get(key)
+            if blk is None:
+                blk = blocks[key] = np.zeros((bm, bk), dtype=val.dtype)
+            blk[i % bm, j % bk] += val[p]
+    # ensure every block-row appears
+    for rb in range(nrb):
+        if not any(k[0] == rb for k in blocks):
+            blocks[(rb, 0)] = np.zeros((bm, bk), dtype=val.dtype)
+    keys = sorted(blocks.keys())
+    val_blocks = np.stack([blocks[k] for k in keys])
+    row_ids = np.array([k[0] for k in keys], dtype=np.int32)
+    col_ids = np.array([k[1] for k in keys], dtype=np.int32)
+    return val_blocks, row_ids, col_ids, nkb * bk, nrb
+
+
+@functools.partial(jax.jit, static_argnames=("nrows_blocks", "interpret", "method"))
+def _spmv_impl(val_blocks, row_ids, col_ids, vec_tiles, *, nrows_blocks,
+               interpret, method):
+    if method == "ref":
+        return bsr_spmv_ref(val_blocks, row_ids, col_ids, vec_tiles,
+                            nrows_blocks)
+    return _k.bsr_spmv(val_blocks, row_ids, col_ids, vec_tiles,
+                       nrows_blocks, interpret=interpret)
+
+
+def dae_spmv(val_blocks: jax.Array, row_ids: jax.Array, col_ids: jax.Array,
+             vec: jax.Array, nrows_blocks: int, *, method: str = "pallas",
+             interpret: Optional[bool] = None) -> jax.Array:
+    """BSR matvec: returns (nrows_blocks * BM,) flattened result.
+
+    ``vec`` is the dense vector, padded here to a multiple of BK and tiled.
+    """
+    nb, bm, bk = val_blocks.shape
+    kp = round_up(vec.shape[0], bk)
+    if kp != vec.shape[0]:
+        vec = jnp.pad(vec, (0, kp - vec.shape[0]))
+    vec_tiles = vec.reshape(-1, bk)
+    out = _spmv_impl(val_blocks, row_ids.astype(jnp.int32),
+                     col_ids.astype(jnp.int32), vec_tiles,
+                     nrows_blocks=nrows_blocks,
+                     interpret=resolve_interpret(interpret), method=method)
+    return out.reshape(-1)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the decoupled SPMV kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ref(rows, cols, val, vec) -> jnp.ndarray:
+    """CSR matvec oracle via segment sums. rows (N+1,), cols/val (NNZ,)."""
+    nrows = rows.shape[0] - 1
+    nnz = val.shape[0]
+    # row id per nnz
+    row_ids = jnp.searchsorted(rows[1:], jnp.arange(nnz), side="right")
+    prods = val * jnp.take(vec, cols)
+    return jnp.zeros(nrows, val.dtype).at[row_ids].add(prods)
+
+
+def bsr_spmv_ref(val_blocks, row_ids, col_ids, vec, nrows_blocks) -> jnp.ndarray:
+    """BSR oracle: val_blocks (NB, BM, BK), vec (KB, BK) -> (nrows_blocks, BM)."""
+    nb, bm, bk = val_blocks.shape
+    vblocks = jnp.take(vec, col_ids, axis=0)             # (NB, BK)
+    prods = jnp.einsum("nmk,nk->nm", val_blocks, vblocks)  # (NB, BM)
+    out = jnp.zeros((nrows_blocks, bm), val_blocks.dtype)
+    return out.at[row_ids].add(prods)

@@ -1,0 +1,102 @@
+"""Jit'd public wrappers for flash attention."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention.ref import attention_ref, decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bk", "interpret", "method"))
+def _flash_impl(q, k, v, *, causal, window, bq, bk, interpret, method):
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    scale = d ** -0.5
+    if method == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window)
+    sqp, skp = round_up(sq, bq), round_up(sk, bk)
+    if sqp != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    if skp != sk:
+        pad = ((0, 0), (0, 0), (0, skp - sk), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    out = _k.flash(q, k, v, causal=causal, window=window, scale=scale,
+                   s_real=sk, bq=bq, bk=bk, interpret=interpret)
+    return out[:, :, :sq, :]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128, method: str = "pallas",
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q (B,H,S,D); k,v (B,KVH,S,D) with H % KVH == 0 (GQA)."""
+    return _flash_impl(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                       interpret=resolve_interpret(interpret), method=method)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret", "method"))
+def _decode_impl(q, k_cache, v_cache, lengths, *, bk, interpret, method):
+    b, h, d = q.shape
+    kvh, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = d ** -0.5
+    if method == "ref":
+        return decode_ref(q, k_cache, v_cache, lengths)
+    sp = round_up(s, bk)
+    if sp != s:
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    qg = q.reshape(b, kvh, g, d)
+    out = _k.flash_decode(qg, k_cache, v_cache, lengths.astype(jnp.int32),
+                          scale=scale, bk=bk, interpret=interpret)
+    return out.reshape(b, h, d)
+
+
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 lengths: jax.Array, *, bk: int = 128,
+                 method: str = "pallas",
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """One-token decode: q (B,H,D) against caches (B,KVH,S,D)."""
+    return _decode_impl(q, k_cache, v_cache, lengths, bk=bk,
+                        interpret=resolve_interpret(interpret), method=method)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "method"))
+def _decode_paged_impl(q, k_pages, v_pages, page_table, lengths, *,
+                       interpret, method):
+    b, h, d = q.shape
+    kvh = k_pages.shape[1]
+    g = h // kvh
+    scale = d ** -0.5
+    if method == "ref":
+        # reconstruct contiguous caches from pages for the oracle
+        np_, _, page, _ = k_pages.shape
+        kc = jnp.take(k_pages, page_table, axis=0)   # (B, NPB, KVH, PAGE, D)
+        kc = kc.transpose(0, 2, 1, 3, 4).reshape(b, kvh, -1, d)
+        vc = jnp.take(v_pages, page_table, axis=0)
+        vc = vc.transpose(0, 2, 1, 3, 4).reshape(b, kvh, -1, d)
+        return decode_ref(q, kc, vc, lengths)
+    qg = q.reshape(b, kvh, g, d)
+    out = _k.flash_decode_paged(qg, k_pages, v_pages,
+                                page_table.astype(jnp.int32),
+                                lengths.astype(jnp.int32), scale=scale,
+                                interpret=interpret)
+    return out.reshape(b, h, d)
+
+
+def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
+                       method: str = "pallas",
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Paged decode: pages (NP,KVH,PAGE,D), page_table (B, S/PAGE) int32."""
+    return _decode_paged_impl(q, k_pages, v_pages, page_table, lengths,
+                              interpret=resolve_interpret(interpret),
+                              method=method)

@@ -1,0 +1,64 @@
+"""Grouped expert matmul — decoupled SPMV generalized to MoE (paper §4.1).
+
+After top-k routing, the token→expert map is CSR-shaped (group offsets =
+``rows``).  The false dependency the paper removes for SPMV — products
+gated by row-pointer loads — appears here as expert GEMMs gated by the
+routing result.  Decoupling: ops.py sorts tokens by expert and emits a
+``block_expert`` stream (one expert id per token block); the kernel
+scalar-prefetches it, so the *weight* block fetch for step i+1 (an
+irregular, data-dependent HBM read of expert ``block_expert[i+1]``) is
+issued while step i multiplies — the Access loop running ahead of the
+MXU Execute loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(be_ref, x_ref, w_ref, o_ref, acc, *, nd: int):
+    di = pl.program_id(2)
+
+    @pl.when(di == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(di == nd - 1)
+    def _flush():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def gmm(x: jax.Array, w: jax.Array, block_expert: jax.Array, *, bt: int,
+        bf: int, bd: int, interpret: bool = True) -> jax.Array:
+    """x (T, D) sorted by expert, T % bt == 0; w (E, D, F);
+    block_expert (T//bt,) int32.  Returns (T, F)."""
+    t, d = x.shape
+    e, _, f = w.shape
+    ntb, nf, nd = t // bt, f // bf, d // bd
+    grid = (ntb, nf, nd)
+
+    kernel = functools.partial(_gmm_kernel, nd=nd)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bt, bd), lambda i, j, k, be: (i, k)),
+                pl.BlockSpec((1, bd, bf), lambda i, j, k, be: (be[i], k, j)),
+            ],
+            out_specs=pl.BlockSpec((bt, bf), lambda i, j, k, be: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, f), x.dtype),
+        interpret=interpret,
+    )(block_expert, x, w)

@@ -1,0 +1,47 @@
+"""Jit'd wrapper for the grouped expert matmul."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_interpret, round_up
+from repro.kernels.grouped_matmul import kernel as _k
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bf", "bd", "interpret",
+                                              "method"))
+def _gmm_impl(x, w, block_expert, *, bt, bf, bd, interpret, method):
+    if method == "ref":
+        return grouped_matmul_ref(x, w, block_expert, bt)
+    t, d = x.shape
+    e, _, f = w.shape
+    dp, fp = round_up(d, bd), round_up(f, bf)
+    if dp != d:
+        x = jnp.pad(x, ((0, 0), (0, dp - d)))
+        w = jnp.pad(w, ((0, 0), (0, dp - d), (0, 0)))
+    if fp != f:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, fp - f)))
+    out = _k.gmm(x, w, block_expert.astype(jnp.int32), bt=bt, bf=bf, bd=bd,
+                 interpret=interpret)
+    return out[:, :f]
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, block_expert: jax.Array, *,
+                   bt: int = 128, bf: int = 128, bd: int = 512,
+                   method: str = "pallas",
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Expert-grouped GEMM: x (T, D) with tokens sorted by expert and
+    padded so groups align to ``bt``; block_expert (T//bt,) is the expert
+    of each token block; w (E, D, F).  Returns (T, F)."""
+    t, d = x.shape
+    if t % bt:
+        raise ValueError(f"T={t} must be a multiple of bt={bt}")
+    bd = min(bd, round_up(d, 128))
+    bf = min(bf, round_up(w.shape[2], 128))
+    return _gmm_impl(x, w, block_expert, bt=bt, bf=bf, bd=bd,
+                     interpret=resolve_interpret(interpret), method=method)

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: prove every (architecture x input shape) lowers,
+SPMD-partitions, and fits on the production meshes — without hardware.
+
+For each cell:
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...)\
+            .lower(*input_specs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / HLO collective scan
+
+Results go to experiments/dryrun/<arch>__<shape>__<mesh>.json
+(incremental; --force recomputes).  benchmarks/roofline.py turns these
+into the §Roofline table.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, long_context_ok
+from repro.configs.shapes import InputShape
+from repro.launch.hlo_stats import collective_stats, count_ops
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (shard_prefill_step, shard_serve_step,
+                                shard_train_step)
+from repro.models.common import ModelConfig
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Cost probes: XLA counts a lax.scan body ONCE regardless of trip count, so
+# FLOPs / bytes / collective bytes from the production (scanned) compile
+# undercount the layer stack.  We therefore lower tiny UNROLLED variants —
+# one per homogeneous layer segment with counts 1 vs 2 — and reconstruct:
+#     total = base + sum_seg (L_seg - 1) * (probe_seg - base)
+# which is exact for per-layer-replicated structure.  memory_analysis and
+# the compile itself come from the real scanned artifact.
+# ---------------------------------------------------------------------------
+
+
+def segment_counts(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return [cfg.n_enc_layers, cfg.n_layers]
+    return [s.count for s in cfg.layer_specs()]
+
+
+def with_segment_counts(cfg: ModelConfig, counts):
+    import dataclasses
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_enc_layers=counts[0],
+                                   n_layers=counts[1], scan_layers=False)
+    if cfg.family == "hybrid":
+        kinds = [s.kind for s in cfg.layer_specs()]
+        pos, globals_ = 0, []
+        for kind, c in zip(kinds, counts):
+            if kind == "hymba_global":
+                globals_.extend(range(pos, pos + c))
+            pos += c
+        return dataclasses.replace(cfg, n_layers=pos,
+                                   global_attn_layers=tuple(globals_),
+                                   scan_layers=False)
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        return dataclasses.replace(cfg, first_dense_layers=counts[0],
+                                   n_layers=sum(counts), scan_layers=False)
+    return dataclasses.replace(cfg, n_layers=counts[0], scan_layers=False)
+
+
+def _probe_metrics(cfg, shape, mesh) -> dict:
+    with mesh:
+        jitted, args = build_cell(cfg, shape, mesh)
+        compiled = jitted.lower(*args).compile()
+        cost = compiled.cost_analysis()
+        coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "link_bytes": float(coll["_total"]["link_bytes"]),
+        "coll_payload": float(coll["_total"]["payload_bytes"]),
+    }
+
+
+def corrected_cost(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    counts = segment_counts(cfg)
+    nseg = len(counts)
+    base_counts = [1] * nseg
+    base = _probe_metrics(with_segment_counts(cfg, base_counts), shape, mesh)
+    total = dict(base)
+    deltas = []
+    for i, li in enumerate(counts):
+        probe_counts = list(base_counts)
+        probe_counts[i] = 2
+        probe = _probe_metrics(with_segment_counts(cfg, probe_counts), shape,
+                               mesh)
+        delta = {k: probe[k] - base[k] for k in base}
+        deltas.append(delta)
+        for k in total:
+            total[k] += (li - 1) * delta[k]
+    return {"total": total, "base": base,
+            "per_segment_delta": deltas, "segment_counts": counts}
+
+
+def cell_should_run(arch: str, shape: InputShape) -> bool:
+    if shape.name == "long_500k" and not long_context_ok(arch):
+        return False
+    return True
+
+
+def skip_reason(arch: str, shape: InputShape) -> str:
+    return ("long_500k needs sub-quadratic attention; this arch is pure "
+            "full-attention (DESIGN.md §5)")
+
+
+def build_cell(cfg: ModelConfig, shape: InputShape, mesh):
+    if shape.kind == "train":
+        jitted, args = shard_train_step(cfg, mesh, shape)
+        flat_args = args
+    elif shape.kind == "prefill":
+        jitted, args = shard_prefill_step(cfg, mesh, shape)
+        flat_args = args
+    else:  # decode
+        jitted, args = shard_serve_step(cfg, mesh, shape)
+        flat_args = args
+    return jitted, flat_args
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
+             out_dir: Path = OUT_DIR, overrides: dict | None = None,
+             variant: str = "") -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    if variant:
+        tag += f"__{variant}"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind, "seq_len": shape.seq_len,
+           "global_batch": shape.global_batch, "variant": variant,
+           "overrides": overrides or {}}
+
+    if not cell_should_run(arch, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = skip_reason(arch, shape)
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    cfg = get_config(arch, kernel_mode="ref", **(overrides or {}))
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        with mesh:
+            jitted, args = build_cell(cfg, shape, mesh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t1
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        cost_corr = corrected_cost(cfg, shape, mesh)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "code_bytes": int(mem.generated_code_size_in_bytes),
+            },
+            cost={k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float)) and
+                  ("flops" in k or "bytes" in k or "utilization" in k)},
+            cost_corrected=cost_corr,
+            collectives=collective_stats(hlo),
+            op_counts=count_ops(hlo),
+            n_devices=int(mesh.devices.size),
+        )
+        print(f"[dryrun] {tag}: OK lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s "
+              f"flops/dev={cost_corr['total']['flops']:.3e} "
+              f"link_bytes/dev={cost_corr['total']['link_bytes']:.3e}")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug to record
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {str(e)[:200]}")
+
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="", help="tag for override runs")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (e.g. attn_impl=chunked)")
+    ns = ap.parse_args()
+
+    overrides = {}
+    for kv in ns.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            v = {"true": True, "false": False}.get(v.lower(), v)
+        overrides[k] = v
+
+    archs = [ns.arch] if ns.arch else list(ARCHS)
+    shapes = [ns.shape] if ns.shape else list(SHAPES)
+    meshes = ["single", "multi"] if ns.mesh == "both" else [ns.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, force=ns.force,
+                               overrides=overrides, variant=ns.variant)
+                s = rec["status"]
+                n_ok += s == "ok"
+                n_fail += s == "error"
+                n_skip += s == "skipped"
+    print(f"[dryrun] done: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

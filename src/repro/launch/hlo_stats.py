@@ -1,0 +1,110 @@
+"""Parse collective ops + payload bytes out of compiled HLO text.
+
+``collective_bytes`` is not in cost_analysis, so we scan the HLO for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instructions, sum their result payload bytes, and model per-device link
+traffic with the standard ring formulas:
+
+  all-reduce       2 * S * (g-1)/g        (S = payload bytes)
+  all-gather       S * (g-1)/g            (S = gathered result bytes)
+  reduce-scatter   S * (g-1)/g            (S = input bytes ~ result * g)
+  all-to-all       S * (g-1)/g
+  collective-permute  S
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    bsz = _DTYPE_BYTES.get(dtype)
+    if bsz is None:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * bsz
+
+
+def _line_collective(line: str):
+    """Return (op, payload_bytes, group_size) or None."""
+    stripped = line.strip()
+    m = re.search(r"=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) +
+                  r")(-start|-done)?\(", stripped)
+    if not m:
+        return None
+    result_types, op, phase = m.group(1), m.group(2), m.group(3)
+    if phase == "-done":
+        return None  # counted at -start
+    payload = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_types))
+    g = 1
+    mg = _GROUPS_RE.search(stripped)
+    if mg:
+        g = int(mg.group(2))
+    else:
+        mg2 = _GROUPS_LIST_RE.search(stripped)
+        if mg2:
+            first = mg2.group(1).split("}")[0].split("{")[-1]
+            g = max(1, len([x for x in first.split(",") if x.strip()]))
+    return op, payload, g
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Aggregate payload + ring-model per-device link bytes by op kind."""
+    out: Dict[str, Dict[str, float]] = {}
+    total_link = 0.0
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        parsed = _line_collective(line)
+        if parsed is None:
+            continue
+        op, payload, g = parsed
+        if op == "all-reduce":
+            link = 2 * payload * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            link = payload * (g - 1)  # result bytes * (g-1) ~ input*(g-1)/g
+        elif op == "collective-permute":
+            link = float(payload)
+        else:  # all-gather, all-to-all
+            link = payload * (g - 1) / max(g, 1)
+        d = out.setdefault(op, {"count": 0, "payload_bytes": 0.0,
+                                "link_bytes": 0.0})
+        d["count"] += 1
+        d["payload_bytes"] += payload
+        d["link_bytes"] += link
+        total_link += link
+    out["_total"] = {"count": sum(d["count"] for k, d in out.items()
+                                  if not k.startswith("_")),
+                     "payload_bytes": sum(d["payload_bytes"]
+                                          for k, d in out.items()
+                                          if not k.startswith("_")),
+                     "link_bytes": total_link}
+    return out
+
+
+def count_ops(hlo_text: str, names: Tuple[str, ...] = ("fusion", "custom-call",
+                                                       "while", "dot",
+                                                       "convolution")):
+    counts = {}
+    for n in names:
+        counts[n] = len(re.findall(rf"\b{n}\(", hlo_text))
+    return counts

@@ -1,0 +1,33 @@
+"""Production mesh definitions.
+
+A FUNCTION (not module-level constant) so importing this module never
+touches jax device state.  The dry-run forces 512 host devices via
+XLA_FLAGS *before* any jax import (see dryrun.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before importing jax")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_debug_mesh(shape=(2, 4), axes=("data", "model")) -> Mesh:
+    """Small mesh for unit tests (e.g. 8 forced host devices)."""
+    n = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev_array, axes)

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the argument pytree for the step the
+shape lowers: train_4k/prefill -> train_step/prefill_step inputs;
+decode_* -> serve_step inputs (one new token + KV cache of seq_len).
+Modality frontends ([audio]/[vlm]) are STUBS: precomputed frame/patch
+embeddings appear here as dense inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape
+from repro.models.common import ModelConfig
+from repro.models.registry import build_model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        # audio frontend stub: precomputed frame embeddings (enc input);
+        # frame count = seq_len (one frame embedding per target position)
+        specs["frames"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_arg_specs(cfg: ModelConfig, shape: InputShape
+                     ) -> Tuple[Any, Dict[str, Any]]:
+    """Returns (cache_specs, other_arg_specs) for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    bundle = build_model(cfg)
+    cache_specs = jax.eval_shape(lambda: bundle.cache_init(b, s))
+    args: Dict[str, Any] = {
+        "token": SDS((b,), jnp.int32),
+        "pos": SDS((b,), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        args["enc_out"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    return cache_specs, args
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    bundle = build_model(cfg)
+    return jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0)))

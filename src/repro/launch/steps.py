@@ -1,0 +1,163 @@
+"""Sharded train / prefill / serve steps for every architecture.
+
+These are the functions the dry-run lowers and the launchers run:
+  * train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+  * prefill_step(params, batch) -> last-position logits
+  * serve_step(params, cache, token, pos[, enc_out]) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.launch import specs as _specs
+from repro.models.common import ModelConfig
+from repro.models.registry import ModelBundle, build_model
+from repro.optim import AdamW, warmup_cosine
+from repro.parallel.sharding import (ShardingRules, batch_sharding,
+                                     cache_shardings, param_shardings)
+
+
+def default_optimizer(total_steps: int = 10_000) -> AdamW:
+    return AdamW(lr=warmup_cosine(3e-4, 200, total_steps), weight_decay=0.1)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optional[AdamW] = None
+                    ) -> Callable:
+    bundle = build_model(cfg)
+    opt = optimizer or default_optimizer()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    bundle = build_model(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            enc_out = bundle.encode(params, batch["frames"])
+            return enc_out
+        logits = bundle.apply(params, batch["tokens"])
+        return logits[:, -1, :].astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    bundle = build_model(cfg)
+
+    if cfg.family == "encdec":
+        def serve_step(params, cache, token, pos, enc_out):
+            return bundle.decode_step(params, enc_out, cache, token, pos)
+    else:
+        def serve_step(params, cache, token, pos):
+            return bundle.decode_step(params, cache, token, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharded (jit) wrappers
+# ---------------------------------------------------------------------------
+
+
+def _bind_mesh_axes(cfg: ModelConfig, mesh: Mesh) -> ModelConfig:
+    import dataclasses
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return dataclasses.replace(cfg, mesh_dp_axes=dp or ("data",))
+
+
+def shard_train_step(cfg: ModelConfig, mesh: Mesh,
+                     shape: InputShape, rules: Optional[ShardingRules] = None,
+                     optimizer: Optional[AdamW] = None,
+                     donate: bool = True):
+    """Returns (jitted_step, arg_specs) ready to .lower(**arg_specs)."""
+    rules = rules or ShardingRules()
+    cfg = _bind_mesh_axes(cfg, mesh)
+    step = make_train_step(cfg, optimizer)
+
+    p_specs = _specs.param_specs(cfg)
+    p_shard = param_shardings(p_specs, mesh, rules)
+    opt = optimizer or default_optimizer()
+    o_specs = jax.eval_shape(lambda: opt.init(p_specs))
+    o_shard = jax.tree.map(
+        lambda s: s if isinstance(s, NamedSharding) else s,
+        param_shardings(o_specs, mesh, rules))
+    b_specs = _specs.train_batch_specs(cfg, shape)
+    b_shard = jax.tree.map(lambda s: batch_sharding(mesh, len(s.shape), rules),
+                           b_specs)
+    metrics_shard = {"loss": NamedSharding(mesh, P()),
+                     "grad_norm": NamedSharding(mesh, P())}
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metrics_shard),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    args = (p_specs, o_specs, b_specs)
+    return jitted, args
+
+
+def shard_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                       rules: Optional[ShardingRules] = None):
+    rules = rules or ShardingRules()
+    step = make_prefill_step(cfg)
+    p_specs = _specs.param_specs(cfg)
+    p_shard = param_shardings(p_specs, mesh, rules)
+    b_specs = _specs.train_batch_specs(cfg, shape)
+    b_specs.pop("labels")
+    b_shard = jax.tree.map(lambda s: batch_sharding(mesh, len(s.shape), rules),
+                           b_specs)
+    out_shard = batch_sharding(mesh, 3 if cfg.family == "encdec" else 2, rules)
+    jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                     out_shardings=out_shard)
+    return jitted, (p_specs, b_specs)
+
+
+def shard_serve_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                     rules: Optional[ShardingRules] = None,
+                     donate: bool = True):
+    rules = rules or ShardingRules()
+    step = make_serve_step(cfg)
+    p_specs = _specs.param_specs(cfg)
+    p_shard = param_shardings(p_specs, mesh, rules)
+    cache_specs, args = _specs.decode_arg_specs(cfg, shape)
+    c_shard = cache_shardings(cache_specs, mesh, rules)
+    b_div = shape.global_batch % _dp_size(mesh) == 0
+    v_div = cfg.vocab % mesh.shape["model"] == 0
+    tok_shard = (batch_sharding(mesh, 1, rules) if b_div
+                 else NamedSharding(mesh, P(None)))
+    logits_shard = NamedSharding(mesh, P(
+        rules.dp_axes(mesh) if b_div else None,
+        "model" if v_div else None))
+
+    in_sh = [p_shard, c_shard, tok_shard, tok_shard]
+    in_args = [p_specs, cache_specs, args["token"], args["pos"]]
+    if cfg.family == "encdec":
+        in_sh.append(batch_sharding(mesh, 3, rules))
+        in_args.append(args["enc_out"])
+
+    jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                     out_shardings=(logits_shard, c_shard),
+                     donate_argnums=(1,) if donate else ())
+    return jitted, tuple(in_args)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

@@ -1,0 +1,7 @@
+"""Model substrate: layers and full-model builders for the 10 assigned
+architectures (dense/GQA, MLA, MoE, SSM, RWKV6, hybrid, enc-dec, VLM)."""
+
+from repro.models.common import ModelConfig, LayerSpec
+from repro.models.registry import build_model
+
+__all__ = ["ModelConfig", "LayerSpec", "build_model"]

@@ -1,0 +1,283 @@
+"""Attention layers: GQA (bias/qk-norm/sliding-window options) and MLA.
+
+Both run in three modes:
+  * prefill (full sequence, causal or bidirectional) — flash kernel or ref;
+  * decode (one token against a KV cache);
+  * cross-attention (encoder-decoder).
+
+The KV block stream of the flash kernel is the decoupled-load path
+(DESIGN.md §4.2); MLA caches the *compressed latent* so the decoupled
+fetch reads kv_lora_rank + rope_dim bytes per token instead of
+2 * KVH * head_dim.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, dense_init, rmsnorm,
+                                 rmsnorm_init, rope)
+from repro.kernels.flash_attention.ops import flash_attention, flash_decode
+from repro.kernels.flash_attention.ref import (attention_banded,
+                                               attention_chunked,
+                                               attention_ref, decode_ref)
+
+
+def _prefill_attention(cfg: ModelConfig, q, k, v, *, causal, window):
+    """Dispatch: Pallas flash kernel / banded window / chunked online-
+    softmax / naive S^2.  ``unroll`` follows cfg.scan_layers so the
+    dry-run cost probes count every chunk."""
+    if cfg.kernel_mode == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window)
+    unroll = not cfg.scan_layers
+    if cfg.attn_impl == "banded" and window and causal:
+        return attention_banded(q, k, v, window=window, causal=True,
+                                chunk=min(cfg.attn_chunk, window),
+                                unroll=unroll)
+    if cfg.attn_impl in ("banded", "chunked"):
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 chunk=cfg.attn_chunk, unroll=unroll)
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    hd, h, kvh, d = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, cfg.pdtype),
+        "wk": dense_init(ks[1], d, kvh * hd, cfg.pdtype),
+        "wv": dense_init(ks[2], d, kvh * hd, cfg.pdtype),
+        "wo": dense_init(ks[3], h * hd, d, cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((kvh * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((kvh * hd,), cfg.pdtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, cfg.pdtype)
+        p["k_norm"] = rmsnorm_init(hd, cfg.pdtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x, positions):
+    b, s, d = x.shape
+    hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.adtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta)
+    k = rope(k.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    return q, k, v      # (B, H, S, hd), (B, KVH, S, hd) x2
+
+
+def gqa_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
+              window: Optional[int] = None,
+              cache: Optional[Dict[str, Any]] = None
+              ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """Prefill path when cache is None; decode path updates the cache.
+
+    cache = {"k": (B,KVH,Smax,hd), "v": ..., "len": (B,) int32}
+    """
+    b, s, d = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+
+    if cache is None:
+        out = _prefill_attention(cfg, q, k, v, causal=causal, window=window)
+        new_cache = None
+    else:
+        assert s == 1, "decode expects one new token"
+        pos = cache["len"]                                     # (B,)
+        # scatter the new K/V at each batch row's position
+        kc = _scatter_token(cache["k"], k, pos)
+        vc = _scatter_token(cache["v"], v, pos)
+        lens = pos + 1
+        qd = q[:, :, 0, :]                                     # (B,H,hd)
+        if cfg.kernel_mode == "pallas":
+            out = flash_decode(qd, kc, vc, lens)
+        else:
+            out = decode_ref(qd, kc, vc, lens)
+        if window is not None:
+            pass  # window decode handled by length mask upstream for now
+        out = out[:, :, None, :]                               # (B,H,1,hd)
+        new_cache = {"k": kc, "v": vc, "len": lens}
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+    out = out @ p["wo"].astype(cfg.adtype)
+    return out, new_cache
+
+
+def _scatter_token(cache: jnp.ndarray, new: jnp.ndarray,
+                   pos: jnp.ndarray) -> jnp.ndarray:
+    """cache (B, KVH, Smax, hd); new (B, KVH, 1, hd); pos (B,)."""
+    smax = cache.shape[2]
+    onehot = (jnp.arange(smax)[None, :] == pos[:, None])       # (B, Smax)
+    upd = onehot[:, None, :, None] * new.astype(cache.dtype)
+    keep = jnp.where(onehot[:, None, :, None], 0, 1).astype(cache.dtype)
+    return cache * keep + upd
+
+
+# cross attention (enc-dec) ---------------------------------------------------
+
+
+def cross_attn_apply(cfg: ModelConfig, p, x, enc_kv, positions):
+    """x (B,S,D) queries; enc_kv precomputed (k, v) (B,KVH,Senc,hd)."""
+    b, s, d = x.shape
+    hd, h = cfg.hd, cfg.n_heads
+    dt = cfg.adtype
+    q = (x @ p["wq"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k, v = enc_kv
+    out = _prefill_attention(cfg, q, k, v, causal=False, window=None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return out @ p["wo"].astype(dt)
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    b, se, d = enc_out.shape
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.adtype
+    k = (enc_out @ p["wk"].astype(dt))
+    v = (enc_out @ p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    k = k.reshape(b, se, kvh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, se, kvh, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 / MiniCPM3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope, cfg.qk_rope_dim, cfg.v_hd
+    r = cfg.kv_lora_rank
+    p: Dict[str, Any] = {
+        "w_dkv": dense_init(ks[0], d, r, cfg.pdtype),          # latent down
+        "kv_norm": rmsnorm_init(r, cfg.pdtype),
+        "w_uk": dense_init(ks[1], r, h * dn, cfg.pdtype),      # k up (nope)
+        "w_uv": dense_init(ks[2], r, h * dv, cfg.pdtype),      # v up
+        "w_kr": dense_init(ks[3], d, dr, cfg.pdtype),          # shared k rope
+        "wo": dense_init(ks[4], h * dv, d, cfg.pdtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[5], d, cfg.q_lora_rank, cfg.pdtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, cfg.pdtype)
+        p["w_uq"] = dense_init(ks[6], cfg.q_lora_rank, h * (dn + dr), cfg.pdtype)
+    else:
+        p["wq"] = dense_init(ks[7], d, h * (dn + dr), cfg.pdtype)
+    return p
+
+
+def _mla_q(cfg, p, x):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope, cfg.qk_rope_dim
+    dt = cfg.adtype
+    if cfg.q_lora_rank:
+        ql = rmsnorm(x @ p["w_dq"].astype(dt), p["q_norm"], cfg.norm_eps)
+        q = ql @ p["w_uq"].astype(dt)
+    else:
+        q = x @ p["wq"].astype(dt)
+    q = q.reshape(b, s, h, dn + dr)
+    return q[..., :dn], q[..., dn:]            # nope (B,S,H,dn), rope (B,S,H,dr)
+
+
+def mla_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
+              cache: Optional[Dict[str, Any]] = None):
+    """MLA attention.  cache = {"ckv": (B,Smax,r), "kr": (B,Smax,dr),
+    "len": (B,)} — the compressed-latent cache (the MLA memory win)."""
+    b, s, d = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope, cfg.qk_rope_dim, cfg.v_hd
+    r = cfg.kv_lora_rank
+    dt = cfg.adtype
+
+    q_nope, q_rope = _mla_q(cfg, p, x)
+    q_rope = rope(q_rope.transpose(0, 2, 1, 3), positions[:, None, :],
+                  cfg.rope_theta)                               # (B,H,S,dr)
+    q_nope = q_nope.transpose(0, 2, 1, 3)                       # (B,H,S,dn)
+
+    ckv = rmsnorm(x @ p["w_dkv"].astype(dt), p["kv_norm"], cfg.norm_eps)
+    kr = rope((x @ p["w_kr"].astype(dt))[:, None, :, :],
+              positions[:, None, :], cfg.rope_theta)            # (B,1,S,dr)
+
+    if cache is not None:
+        assert s == 1
+        pos = cache["len"]
+        ckv_c = _scatter_vec(cache["ckv"], ckv, pos)            # (B,Smax,r)
+        kr_c = _scatter_vec(cache["kr"], kr[:, 0], pos)         # (B,Smax,dr)
+        lens = pos + 1
+        ckv_full, kr_full = ckv_c, kr_c[:, None]
+        new_cache = {"ckv": ckv_c, "kr": kr_c, "len": lens}
+        s_kv = ckv_c.shape[1]
+    else:
+        ckv_full, kr_full = ckv, kr
+        new_cache = None
+        s_kv = s
+
+    # up-project latents to per-head K/V (decode recomputes from latents —
+    # the decoupled fetch reads only r + dr per token)
+    k_nope = (ckv_full @ p["w_uk"].astype(dt)).reshape(b, s_kv, h, dn)
+    v = (ckv_full @ p["w_uv"].astype(dt)).reshape(b, s_kv, h, dv)
+    k_nope = k_nope.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_full, (b, h, s_kv, dr)).astype(dt)], -1)
+    qk = jnp.concatenate([q_nope, q_rope], -1)                  # (B,H,S,dn+dr)
+
+    if cache is None:
+        out = _prefill_attention(cfg, qk, k, v_pad_to(v, k.shape[-1]),
+                                 causal=causal, window=None)[..., :dv]
+    else:
+        qd = qk[:, :, 0, :]
+        if cfg.kernel_mode == "pallas":
+            out = flash_decode(qd, k, v_pad_to(v, k.shape[-1]),
+                               new_cache["len"])[..., :dv]
+        else:
+            out = decode_ref(qd, k, v_pad_to(v, k.shape[-1]),
+                             new_cache["len"])[..., :dv]
+        out = out[:, :, None, :]
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dv)
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def v_pad_to(v: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Pad value head dim to match k head dim for the fused kernel."""
+    if v.shape[-1] == d:
+        return v
+    pad = [(0, 0)] * (v.ndim - 1) + [(0, d - v.shape[-1])]
+    return jnp.pad(v, pad)
+
+
+def _scatter_vec(cache: jnp.ndarray, new: jnp.ndarray,
+                 pos: jnp.ndarray) -> jnp.ndarray:
+    """cache (B, Smax, D); new (B, 1, D); pos (B,)."""
+    smax = cache.shape[1]
+    onehot = (jnp.arange(smax)[None, :] == pos[:, None])[..., None]
+    return jnp.where(onehot, new.astype(cache.dtype), cache)

@@ -1,0 +1,162 @@
+"""Per-layer blocks for every architecture family, unified behind
+``block_init(cfg, kind, key)`` / ``block_apply(cfg, kind, p, x, ...)`` so
+stacks can lax.scan over homogeneous segments (common.LayerSpec)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ModelConfig, rmsnorm, rmsnorm_init
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.rwkv import (rwkv_channel_apply, rwkv_channel_init,
+                               rwkv_time_apply, rwkv_time_init)
+from repro.models.ssm import ssm_apply, ssm_init, ssm_init_state
+
+
+def _attn_init(cfg: ModelConfig, key):
+    if cfg.attn_kind == "mla":
+        return attn.mla_init(cfg, key)
+    return attn.gqa_init(cfg, key)
+
+
+def _attn_apply(cfg, p, x, positions, *, causal=True, window=None, cache=None):
+    if cfg.attn_kind == "mla":
+        return attn.mla_apply(cfg, p, x, positions, causal=causal, cache=cache)
+    return attn.gqa_apply(cfg, p, x, positions, causal=causal, window=window,
+                          cache=cache)
+
+
+def block_init(cfg: ModelConfig, kind: str, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind == "attn":
+        return {"ln1": rmsnorm_init(d, cfg.pdtype),
+                "attn": _attn_init(cfg, ks[0]),
+                "ln2": rmsnorm_init(d, cfg.pdtype),
+                "mlp": mlp_init(cfg, ks[1])}
+    if kind == "moe":
+        return {"ln1": rmsnorm_init(d, cfg.pdtype),
+                "attn": _attn_init(cfg, ks[0]),
+                "ln2": rmsnorm_init(d, cfg.pdtype),
+                "moe": moe_init(cfg, ks[1])}
+    if kind in ("hymba", "hymba_global"):
+        return {"ln1": rmsnorm_init(d, cfg.pdtype),
+                "attn": _attn_init(cfg, ks[0]),
+                "ssm": ssm_init(cfg, ks[1]),
+                "ln2": rmsnorm_init(d, cfg.pdtype),
+                "mlp": mlp_init(cfg, ks[2])}
+    if kind == "rwkv":
+        return {"ln1": rmsnorm_init(d, cfg.pdtype),
+                "time": rwkv_time_init(cfg, ks[0]),
+                "ln2": rmsnorm_init(d, cfg.pdtype),
+                "chan": rwkv_channel_init(cfg, ks[1])}
+    if kind == "xattn":  # enc-dec decoder block
+        return {"ln1": rmsnorm_init(d, cfg.pdtype),
+                "attn": _attn_init(cfg, ks[0]),
+                "lnx": rmsnorm_init(d, cfg.pdtype),
+                "xattn": attn.gqa_init(cfg, ks[1]),
+                "ln2": rmsnorm_init(d, cfg.pdtype),
+                "mlp": mlp_init(cfg, ks[2])}
+    if kind == "enc":    # bidirectional encoder block
+        return {"ln1": rmsnorm_init(d, cfg.pdtype),
+                "attn": _attn_init(cfg, ks[0]),
+                "ln2": rmsnorm_init(d, cfg.pdtype),
+                "mlp": mlp_init(cfg, ks[1])}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *,
+                cache: Optional[Dict[str, Any]] = None,
+                enc_kv=None) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    eps = cfg.norm_eps
+    new_cache: Optional[Dict[str, Any]] = None
+
+    if kind in ("attn", "moe", "enc"):
+        causal = kind != "enc"
+        window = cfg.window if kind != "enc" else None
+        h, ac = _attn_apply(cfg, p["attn"], rmsnorm(x, p["ln1"], eps),
+                            positions, causal=causal, window=window,
+                            cache=None if cache is None else cache["attn"])
+        x = x + h
+        if kind == "moe":
+            # decode: dropless dispatch (capacity drops would make decode
+            # diverge from prefill); train: GShard-style capacity factor
+            cf = float(cfg.n_experts) if cache is not None else 0.0
+            x = x + moe_apply(cfg, p["moe"], rmsnorm(x, p["ln2"], eps),
+                              capacity_factor=cf)
+        else:
+            x = x + mlp_apply(cfg, p["mlp"], rmsnorm(x, p["ln2"], eps))
+        if cache is not None:
+            new_cache = {"attn": ac}
+
+    elif kind in ("hymba", "hymba_global"):
+        window = None if kind == "hymba_global" else cfg.window
+        xin = rmsnorm(x, p["ln1"], eps)
+        h_attn, ac = _attn_apply(cfg, p["attn"], xin, positions,
+                                 causal=True, window=window,
+                                 cache=None if cache is None else cache["attn"])
+        h_ssm, sc = ssm_apply(cfg, p["ssm"], xin,
+                              None if cache is None else cache["ssm"])
+        x = x + 0.5 * (h_attn + h_ssm)       # parallel heads, mean-combined
+        x = x + mlp_apply(cfg, p["mlp"], rmsnorm(x, p["ln2"], eps))
+        if cache is not None:
+            new_cache = {"attn": ac, "ssm": sc}
+
+    elif kind == "rwkv":
+        st = None if cache is None else {"shift": cache["time_shift"],
+                                         "wkv": cache["wkv"]}
+        h, ts = rwkv_time_apply(cfg, p["time"], rmsnorm(x, p["ln1"], eps), st)
+        x = x + h
+        cs = None if cache is None else cache["chan_shift"]
+        h, ns = rwkv_channel_apply(cfg, p["chan"], rmsnorm(x, p["ln2"], eps), cs)
+        x = x + h
+        if cache is not None:
+            new_cache = {"time_shift": ts["shift"], "wkv": ts["wkv"],
+                         "chan_shift": ns}
+
+    elif kind == "xattn":
+        h, ac = _attn_apply(cfg, p["attn"], rmsnorm(x, p["ln1"], eps),
+                            positions, causal=True,
+                            cache=None if cache is None else cache["attn"])
+        x = x + h
+        x = x + attn.cross_attn_apply(cfg, p["xattn"],
+                                      rmsnorm(x, p["lnx"], eps), enc_kv,
+                                      positions)
+        x = x + mlp_apply(cfg, p["mlp"], rmsnorm(x, p["ln2"], eps))
+        if cache is not None:
+            new_cache = {"attn": ac}
+
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    return x, new_cache
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_max: int
+                     ) -> Dict[str, Any]:
+    """Decode-cache pytree for one layer of ``kind``."""
+    hd, kvh = cfg.hd, cfg.n_kv_heads
+    if kind in ("attn", "moe", "enc", "xattn", "hymba", "hymba_global"):
+        if cfg.attn_kind == "mla":
+            ac = {"ckv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), cfg.adtype),
+                  "kr": jnp.zeros((batch, s_max, cfg.qk_rope_dim), cfg.adtype),
+                  "len": jnp.zeros((batch,), jnp.int32)}
+        else:
+            # NOTE: sliding-window layers could use a ring buffer of size
+            # `window`; we allocate the full horizon for simplicity and
+            # account for it in the roofline (perf TODO in EXPERIMENTS.md).
+            ac = {"k": jnp.zeros((batch, kvh, s_max, hd), cfg.adtype),
+                  "v": jnp.zeros((batch, kvh, s_max, hd), cfg.adtype),
+                  "len": jnp.zeros((batch,), jnp.int32)}
+        if kind in ("hymba", "hymba_global"):
+            return {"attn": ac, "ssm": ssm_init_state(cfg, batch)}
+        return {"attn": ac}
+    if kind == "rwkv":
+        from repro.models.rwkv import rwkv_state_init
+        return rwkv_state_init(cfg, batch)
+    raise ValueError(kind)

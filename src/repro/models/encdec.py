@@ -1,0 +1,129 @@
+"""Encoder-decoder assembly (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, D); the transformer backbone
+(24L enc + 24L dec in the full config) is real.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.blocks import block_apply, block_cache_init, block_init
+from repro.models.common import ModelConfig, cross_entropy_loss, dense_init, \
+    rmsnorm, rmsnorm_init
+from repro.models.transformer import _stack_init, embed_tokens
+
+Params = Dict[str, Any]
+
+
+def encdec_init(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": dense_init(ks[0], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "enc": _stack_init(cfg, "enc", cfg.n_enc_layers, ks[1]),
+        "enc_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "dec": _stack_init(cfg, "xattn", cfg.n_layers, ks[2]),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "unembed": dense_init(ks[3], cfg.d_model, cfg.vocab, cfg.pdtype),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jnp.ndarray
+           ) -> jnp.ndarray:
+    """frames (B, S_enc, D) — precomputed modality-frontend embeddings."""
+    b, se, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+    x = frames.astype(cfg.adtype)
+
+    def body(h, layer_params):
+        h2, _ = block_apply(cfg, "enc", layer_params, h, positions)
+        return h2, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x = _scan_or_unroll(cfg, body, x, params["enc"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _scan_or_unroll(cfg, body, x, stacked):
+    from repro.models.transformer import _sp_constraint
+
+    def sp_body(h, layer_params):
+        h2, aux = body(_sp_constraint(cfg, h), layer_params)
+        return _sp_constraint(cfg, h2), aux
+
+    if not cfg.scan_layers:
+        count = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(count):
+            x, _ = sp_body(x, jax.tree.map(lambda a: a[i], stacked))
+        return x
+    x, _ = jax.lax.scan(sp_body, x, stacked)
+    return x
+
+
+def decode_train(cfg: ModelConfig, params: Params, enc_out: jnp.ndarray,
+                 tokens: jnp.ndarray) -> jnp.ndarray:
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(cfg, params, tokens)
+
+    def body(h, layer_params):
+        enc_kv = attn.cross_kv(cfg, layer_params["xattn"], enc_out)
+        h2, _ = block_apply(cfg, "xattn", layer_params, h, positions,
+                            enc_kv=enc_kv)
+        return h2, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x = _scan_or_unroll(cfg, body, x, params["dec"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["unembed"].astype(cfg.adtype)
+
+
+def encdec_loss(cfg: ModelConfig, params: Params,
+                batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    enc_out = encode(cfg, params, batch["frames"])
+    logits = decode_train(cfg, params, enc_out, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+# -- decode (serving) ---------------------------------------------------------
+
+
+def encdec_cache_init(cfg: ModelConfig, batch: int, s_max: int) -> Any:
+    one = block_cache_init(cfg, "xattn", batch, s_max)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+
+def encdec_decode_step(cfg: ModelConfig, params: Params, enc_out: jnp.ndarray,
+                       caches: Any, token: jnp.ndarray, pos: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, Any]:
+    b = token.shape[0]
+    positions = pos[:, None]
+    x = embed_tokens(cfg, params, token[:, None])
+
+    def body(h, pc):
+        layer_params, layer_cache = pc
+        enc_kv = attn.cross_kv(cfg, layer_params["xattn"], enc_out)
+        h2, nc = block_apply(cfg, "xattn", layer_params, h, positions,
+                             cache=layer_cache, enc_kv=enc_kv)
+        return h2, nc
+
+    if not cfg.scan_layers:
+        ncs = []
+        for i in range(cfg.n_layers):
+            x, nci = body(x, jax.tree.map(lambda a: a[i],
+                                          (params["dec"], caches)))
+            ncs.append(nci)
+        nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+    else:
+        x, nc = jax.lax.scan(body, x, (params["dec"], caches))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["unembed"].astype(cfg.adtype)).astype(jnp.float32)
+    return logits, nc

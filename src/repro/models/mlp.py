@@ -1,0 +1,35 @@
+"""Feed-forward layers: SwiGLU (llama-style) / plain ReLU/GeLU (seamless)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, activation, dense_init
+
+
+def mlp_init(cfg: ModelConfig, key, d_ff: int = 0) -> Dict[str, Any]:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, d_ff, cfg.pdtype),
+            "w_up": dense_init(ks[1], d, d_ff, cfg.pdtype),
+            "w_down": dense_init(ks[2], d_ff, d, cfg.pdtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, d_ff, cfg.pdtype),
+        "w_down": dense_init(ks[1], d_ff, d, cfg.pdtype),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    dt = cfg.adtype
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    else:
+        h = activation(cfg.mlp_kind, x @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)

@@ -1,0 +1,52 @@
+"""Arch-family -> model builder registry.
+
+``build_model(cfg)`` returns a uniform interface:
+  init(key) -> params
+  loss(params, batch) -> scalar                      (train objective)
+  apply(params, tokens) -> logits                    (decoder families)
+  cache_init(batch, s_max), decode_step(params, cache, token, pos)
+plus ``input_specs(cfg, shape)`` lives in repro.launch.specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+from repro.models import encdec as _encdec
+from repro.models import transformer as _t
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    apply: Optional[Callable] = None
+    cache_init: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    encode: Optional[Callable] = None
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.family == "encdec":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: _encdec.encdec_init(cfg, key),
+            loss=lambda p, batch: _encdec.encdec_loss(cfg, p, batch),
+            encode=lambda p, frames: _encdec.encode(cfg, p, frames),
+            cache_init=lambda b, s: _encdec.encdec_cache_init(cfg, b, s),
+            decode_step=lambda p, enc_out, cache, tok, pos:
+                _encdec.encdec_decode_step(cfg, p, enc_out, cache, tok, pos),
+        )
+    # decoder-only families (dense, moe, ssm, hybrid, vlm)
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: _t.lm_init(cfg, key),
+        loss=lambda p, batch: _t.lm_loss(cfg, p, batch),
+        apply=lambda p, tokens: _t.lm_apply(cfg, p, tokens),
+        cache_init=lambda b, s: _t.lm_cache_init(cfg, b, s),
+        decode_step=lambda p, cache, tok, pos:
+            _t.lm_decode_step(cfg, p, cache, tok, pos),
+    )

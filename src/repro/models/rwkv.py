@@ -1,0 +1,151 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Attention-free: the WKV state is a per-head (hd × hd) matrix updated
+recurrently — O(S) time, O(1) state — so long_500k decode runs with a
+constant-size state (DESIGN.md §5).  Structure follows arXiv:2404.05892
+(data-dependent decay via a LoRA on w; token-shift mixes), with the
+low-rank mix interpolation simplified to per-channel static mixes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+
+
+def _mix_param(key, d, dtype):
+    return jax.random.uniform(key, (d,), jnp.float32).astype(dtype)
+
+
+def rwkv_time_init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 32)
+    return {
+        "mix_r": _mix_param(ks[0], d, cfg.pdtype),
+        "mix_k": _mix_param(ks[1], d, cfg.pdtype),
+        "mix_v": _mix_param(ks[2], d, cfg.pdtype),
+        "mix_w": _mix_param(ks[3], d, cfg.pdtype),
+        "mix_g": _mix_param(ks[4], d, cfg.pdtype),
+        "wr": dense_init(ks[5], d, d, cfg.pdtype),
+        "wk": dense_init(ks[6], d, d, cfg.pdtype),
+        "wv": dense_init(ks[7], d, d, cfg.pdtype),
+        "wg": dense_init(ks[8], d, d, cfg.pdtype),
+        "w0": jnp.full((d,), -6.0, cfg.pdtype),       # base decay (slow)
+        "w_lora_a": dense_init(ks[9], d, lora, cfg.pdtype),
+        "w_lora_b": dense_init(ks[10], lora, d, cfg.pdtype),
+        "u_bonus": (jax.random.normal(ks[11], (h, hd), jnp.float32) * 0.1
+                    ).astype(cfg.pdtype),
+        "wo": dense_init(jax.random.fold_in(key, 99), d, d, cfg.pdtype),
+        "ln_g": jnp.ones((d,), cfg.pdtype),           # per-head groupnorm gain
+    }
+
+
+def rwkv_channel_init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "mix_k": _mix_param(ks[0], d, cfg.pdtype),
+        "mix_r": _mix_param(ks[1], d, cfg.pdtype),
+        "wk": dense_init(ks[2], d, cfg.d_ff, cfg.pdtype),
+        "wv": dense_init(ks[3], cfg.d_ff, d, cfg.pdtype),
+        "wr": dense_init(jax.random.fold_in(key, 7), d, d, cfg.pdtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x (B,S,D) -> x shifted right by one token; ``prev`` is the last
+    token of the previous chunk (decode)."""
+    if prev is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def rwkv_time_apply(cfg: ModelConfig, p, x, state: Optional[Dict[str, Any]] = None
+                    ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """WKV6 time mix.  state = {"shift": (B,D), "wkv": (B,H,hd,hd)}."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    dt = cfg.adtype
+
+    xs = _token_shift(x, None if state is None else state["shift"])
+
+    def mixed(name):
+        m = p["mix_" + name].astype(dt)
+        return x * m + xs * (1 - m)
+
+    r = (mixed("r") @ p["wr"].astype(dt)).reshape(b, s, h, hd)
+    k = (mixed("k") @ p["wk"].astype(dt)).reshape(b, s, h, hd)
+    v = (mixed("v") @ p["wv"].astype(dt)).reshape(b, s, h, hd)
+    g = jax.nn.silu(mixed("g") @ p["wg"].astype(dt))
+
+    # data-dependent decay (the Finch contribution): w = exp(-exp(w0 + lora))
+    wln = (p["w0"].astype(jnp.float32)
+           + ((mixed("w") @ p["w_lora_a"].astype(dt))
+              @ p["w_lora_b"].astype(dt)).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wln)).reshape(b, s, h, hd)             # in (0,1)
+
+    u = p["u_bonus"].astype(jnp.float32)                         # (H, hd)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+
+    wkv0 = (jnp.zeros((b, h, hd, hd), jnp.float32) if state is None
+            else state["wkv"].astype(jnp.float32))
+
+    def step(wkv, inp):
+        rt, kt, vt, wt = inp                                     # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]                 # (B,H,hd,hd)
+        out = jnp.einsum("bhi,bhij->bhj", rt, wkv + u[None, :, :, None] * kv)
+        wkv = wt[..., :, None] * wkv + kv
+        return wkv, out
+
+    seq = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+           vf.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    wkv_fin, outs = jax.lax.scan(step, wkv0, seq)
+    y = outs.transpose(1, 0, 2, 3).reshape(b, s, d)              # (B,S,D)
+
+    # per-head groupnorm
+    yh = y.reshape(b, s, h, hd)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(b, s, d) * p["ln_g"].astype(jnp.float32)
+
+    y = (y.astype(dt) * g) @ p["wo"].astype(dt)
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1, :], "wkv": wkv_fin.astype(state["wkv"].dtype)}
+    return y, new_state
+
+
+def rwkv_channel_apply(cfg: ModelConfig, p, x,
+                       state: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    dt = cfg.adtype
+    xs = _token_shift(x, state)
+    mk = p["mix_k"].astype(dt)
+    mr = p["mix_r"].astype(dt)
+    k = jax.nn.relu((x * mk + xs * (1 - mk)) @ p["wk"].astype(dt)) ** 2
+    r = jax.nn.sigmoid((x * mr + xs * (1 - mr)) @ p["wr"].astype(dt))
+    y = r * (k @ p["wv"].astype(dt))
+    return y, (x[:, -1, :] if state is not None else None)
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "time_shift": jnp.zeros((batch, d), cfg.adtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "chan_shift": jnp.zeros((batch, d), cfg.adtype),
+    }

@@ -1,0 +1,110 @@
+"""Selective state-space (Mamba-style) mixer — used by the Hymba hybrid.
+
+Training path uses an associative scan over time (sub-quadratic,
+O(S log S) depth); decode carries (conv window, ssm state) recurrently.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+
+
+def ssm_init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dtr = cfg.dt_rank
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, cfg.pdtype),       # x and gate z
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((di,), cfg.pdtype),
+        "w_bcdt": dense_init(ks[2], di, 2 * n + dtr, cfg.pdtype),
+        "w_dt": dense_init(ks[3], dtr, di, cfg.pdtype),
+        "dt_bias": jnp.full((di,), -4.6, cfg.pdtype),           # softplus ~ 0.01
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))).astype(cfg.pdtype),  # (di, n)
+        "d_skip": jnp.ones((di,), cfg.pdtype),
+        "w_out": dense_init(ks[4], di, d, cfg.pdtype),
+    }
+
+
+def _conv1d_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   init_window: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x (B, S, DI); w (K, DI) depthwise causal conv."""
+    k = w.shape[0]
+    if init_window is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_window.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                       # (B, S+K-1, DI)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def ssm_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
+              state: Optional[Dict[str, Any]] = None
+              ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """x (B, S, D) -> (B, S, D).  ``state`` (decode): {"conv": (B,K-1,DI),
+    "ssm": (B, DI, N)}."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dtr = cfg.dt_rank
+    dt = cfg.adtype
+
+    xz = x @ p["w_in"].astype(dt)                                # (B,S,2DI)
+    xs, z = xz[..., :di], xz[..., di:]
+
+    conv_in = None if state is None else state["conv"]
+    xs_conv = jax.nn.silu(_conv1d_causal(xs, p["conv_w"].astype(dt),
+                                         p["conv_b"].astype(dt), conv_in))
+
+    bcdt = xs_conv @ p["w_bcdt"].astype(dt)                      # (B,S,2N+dtr)
+    bmat = bcdt[..., :n].astype(jnp.float32)                     # (B,S,N)
+    cmat = bcdt[..., n:2 * n].astype(jnp.float32)
+    dt_in = bcdt[..., 2 * n:]
+    delta = jax.nn.softplus(dt_in @ p["w_dt"].astype(dt)
+                            + p["dt_bias"].astype(dt)).astype(jnp.float32)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                 # (DI, N)
+    # discretize: da (B,S,DI,N) decay, db*u input
+    da = jnp.exp(delta[..., None] * a[None, None])               # (B,S,DI,N)
+    dbu = (delta * xs_conv.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+
+    if state is None:
+        # associative scan over time: h_t = da_t * h_{t-1} + dbu_t
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+        da_s, h = jax.lax.associative_scan(combine, (da, dbu), axis=1)
+        new_state = None
+    else:
+        h_prev = state["ssm"].astype(jnp.float32)                # (B,DI,N)
+        assert s == 1
+        h = da[:, 0] * h_prev + dbu[:, 0]
+        h = h[:, None]                                           # (B,1,DI,N)
+        conv_win = jnp.concatenate([state["conv"], xs], axis=1)[:, 1:]
+        new_state = {"conv": conv_win, "ssm": h[:, 0].astype(state["ssm"].dtype)}
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, cmat)                     # (B,S,DI)
+    y = y + xs_conv.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(dt)) * jax.nn.silu(z)
+    return y @ p["w_out"].astype(dt), new_state
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), cfg.adtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }

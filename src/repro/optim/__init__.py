@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["AdamW", "OptState", "warmup_cosine"]

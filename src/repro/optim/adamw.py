@@ -1,0 +1,65 @@
+"""AdamW with global-norm clipping — minimal, pytree-native.
+
+Optimizer state shards exactly like the params (the m/v trees inherit
+the param shardings), which is what makes FSDP memory math work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params: Any) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                             params)
+        return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                        v=jax.tree.map(jnp.copy, zeros))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads: Any, state: OptState, params: Any
+               ) -> Tuple[Any, OptState, jnp.ndarray]:
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf))
+                         + 1e-16)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / gnorm)
+            gf = jax.tree.map(lambda g: g * scale, gf)
+
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, gf)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, gf)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, mm, vv):
+            mh = mm / bc1
+            vh = vv / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, OptState(step=step, m=m, v=v), gnorm

@@ -1,0 +1,8 @@
+"""Distribution: sharding rules (DP/FSDP/TP/EP/SP), pipeline stages,
+gradient compression."""
+
+from repro.parallel.sharding import (ShardingRules, param_shardings,
+                                     batch_sharding, cache_shardings)
+
+__all__ = ["ShardingRules", "param_shardings", "batch_sharding",
+           "cache_shardings"]

@@ -1,0 +1,4 @@
+from repro.runtime.train_loop import TrainLoopConfig, fit
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = ["TrainLoopConfig", "fit", "StragglerMonitor"]

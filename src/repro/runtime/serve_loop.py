@@ -1,0 +1,95 @@
+"""Batched serving loop: slot-based continuous batching.
+
+Requests (prompt token arrays) enter a queue; a fixed-size slot pool maps
+them onto the batch dimension of the compiled serve_step.  Finished slots
+are refilled without stopping the decode loop — the decode stream stays
+dense.  (On a real deployment the prefill would run on a separate mesh
+slice; here prefill = teacher-forced cache warmup through serve_step.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (P,) int32
+    max_new: int = 16
+    out: Optional[List[int]] = None
+
+
+class ServeLoop:
+    def __init__(self, cfg, bundle, params, batch_slots: int, s_max: int,
+                 eos_id: int = -1):
+        self.cfg = cfg
+        self.bundle = bundle
+        self.params = params
+        self.b = batch_slots
+        self.s_max = s_max
+        self.eos = eos_id
+        self.cache = bundle.cache_init(batch_slots, s_max)
+        self.pos = jnp.zeros((batch_slots,), jnp.int32)
+        self.cur = jnp.zeros((batch_slots,), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.remaining = np.zeros(batch_slots, np.int64)
+        self._step = jax.jit(bundle.decode_step)
+
+    def _admit(self, queue: List[Request],
+               results: Dict[int, List[int]]) -> None:
+        for slot in range(self.b):
+            if self.active[slot] is None and queue:
+                req = queue.pop(0)
+                req.out = []
+                self.active[slot] = req
+                # prefill: feed prompt tokens through the decode step
+                pos = 0
+                for tok in req.prompt:
+                    logits, self.cache = self._step(
+                        self.params, self.cache,
+                        self.cur.at[slot].set(int(tok)),
+                        self.pos.at[slot].set(pos))
+                    pos += 1
+                first = int(jnp.argmax(logits[slot]))
+                req.out.append(first)          # prefill's own prediction
+                self.pos = self.pos.at[slot].set(pos)
+                self.cur = self.cur.at[slot].set(first)
+                self.remaining[slot] = req.max_new - 1
+                if first == self.eos or self.remaining[slot] <= 0:
+                    results[req.rid] = req.out
+                    self.active[slot] = None
+
+    def run(self, requests: List[Request], max_rounds: int = 10_000
+            ) -> Dict[int, List[int]]:
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        rounds = 0
+        while (queue or any(a is not None for a in self.active)):
+            rounds += 1
+            if rounds > max_rounds:
+                raise RuntimeError("serve loop exceeded max_rounds")
+            self._admit(queue, results)
+            if not any(a is not None for a in self.active):
+                continue
+            logits, self.cache = self._step(self.params, self.cache,
+                                            self.cur, self.pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.pos = self.pos + jnp.asarray(
+                [a is not None for a in self.active], jnp.int32)
+            self.cur = nxt
+            for slot, req in enumerate(self.active):
+                if req is None:
+                    continue
+                tok = int(nxt[slot])
+                req.out.append(tok)
+                self.remaining[slot] -= 1
+                if tok == self.eos or self.remaining[slot] <= 0:
+                    results[req.rid] = req.out
+                    self.active[slot] = None
+        return results

@@ -1,0 +1,21 @@
+import os
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+# Smoke tests and benches must see ONE device (the dry-run alone forces
+# 512 via its own first lines); make sure nothing leaks in.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings, HealthCheck  # noqa: E402
+
+settings.register_profile(
+    "repro",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")

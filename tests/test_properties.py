@@ -1,0 +1,167 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.dae import (ConservationError, DaeProgram, Deq, Enq,
+                            LoadChannel, Process, Req, Resp, StreamChannel)
+from repro.core.simulator import FixedLatencyMemory, simulate
+
+
+# -- stream semantics: order preserved, conservation enforced ----------------
+
+
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=40),
+       st.integers(1, 8))
+def test_stream_fifo_order(values, cap):
+    stc = StreamChannel("s", capacity=cap)
+
+    def prod():
+        for v in values:
+            yield Enq(stc, v)
+
+    got = []
+
+    def cons():
+        for _ in values:
+            got.append((yield Deq(stc)))
+
+    simulate(DaeProgram("t", [Process("p", prod()), Process("c", cons())]),
+             {"mem": FixedLatencyMemory([0])})
+    assert got == values
+
+
+@given(st.integers(1, 30), st.integers(0, 29), st.integers(1, 16))
+def test_request_response_conservation(n_req, n_missing, cap):
+    """n_req requests with fewer responses must raise ConservationError."""
+    n_resp = n_req - (n_missing % n_req) if n_missing % n_req else n_req
+    ch = LoadChannel("c", capacity=max(cap, n_req + 1))
+
+    def gen():
+        for i in range(n_req):
+            yield Req(ch, i % 10)
+        for _ in range(n_resp):
+            yield Resp(ch)
+
+    prog = DaeProgram("t", [Process("p", gen())])
+    mems = {"mem": FixedLatencyMemory(list(range(10)), 5)}
+    if n_resp == n_req:
+        simulate(prog, mems)
+    else:
+        try:
+            simulate(prog, mems)
+            raised = False
+        except ConservationError:
+            raised = True
+        assert raised
+
+
+# -- decoupled == coupled: latency never changes values -----------------------
+
+
+@given(st.integers(1, 200), st.integers(2, 64))
+def test_latency_invariance(latency, rif):
+    from repro.core.workloads import run_workload
+    r = run_workload("hashtable", "rhls_dec", scale="small", latency=latency,
+                     rif=rif)
+    assert r.correct
+
+
+# -- merge-path: merging sorted arrays == sort of concat ----------------------
+
+
+@given(st.lists(st.integers(-50, 50), min_size=1, max_size=200),
+       st.lists(st.integers(-50, 50), min_size=1, max_size=200))
+def test_merge_property(xs, ys):
+    from repro.kernels.dae_merge import merge_sorted
+    a = jnp.sort(jnp.asarray(xs, jnp.int32))
+    b = jnp.sort(jnp.asarray(ys, jnp.int32))
+    out = np.asarray(merge_sorted(a, b, tile=32))
+    ref = np.sort(np.concatenate([np.asarray(a), np.asarray(b)]))
+    np.testing.assert_array_equal(out, ref)
+
+
+# -- gather == take ------------------------------------------------------------
+
+
+@given(st.integers(1, 60), st.integers(1, 40), st.data())
+def test_gather_property(n, m, data):
+    from repro.kernels.dae_gather import dae_gather
+    idx = data.draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    table = jnp.arange(n * 8, dtype=jnp.float32).reshape(n, 8)
+    out = dae_gather(table, jnp.asarray(idx, jnp.int32), method="pipelined")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(table)[np.asarray(idx)])
+
+
+# -- searchsorted == jnp.searchsorted -----------------------------------------
+
+
+@given(st.lists(st.integers(-100, 100), min_size=1, max_size=300),
+       st.lists(st.integers(-120, 120), min_size=1, max_size=32))
+def test_searchsorted_property(table_vals, keys):
+    from repro.kernels.dae_chase import batched_searchsorted
+    table = jnp.sort(jnp.asarray(table_vals, jnp.int32))
+    k = jnp.asarray(keys, jnp.int32)
+    out = np.asarray(batched_searchsorted(table, k, block=64))
+    ref = np.searchsorted(np.asarray(table), np.asarray(k), side="right")
+    np.testing.assert_array_equal(out, ref)
+
+
+# -- CSR/BSR: conversion preserves the matvec ---------------------------------
+
+
+@given(st.integers(1, 12), st.integers(1, 100), st.integers(0, 60))
+def test_csr_bsr_property(nrows, ncols, nnz):
+    from repro.kernels.dae_spmv import csr_to_bsr, dae_spmv
+    r = np.random.default_rng(nrows * 1000 + ncols * 10 + nnz)
+    counts = r.multinomial(nnz, np.ones(nrows) / nrows) if nnz else \
+        np.zeros(nrows, int)
+    rows = np.zeros(nrows + 1, np.int64)
+    rows[1:] = np.cumsum(counts)
+    cols = r.integers(0, ncols, nnz)
+    val = r.standard_normal(nnz)
+    vec = r.standard_normal(ncols)
+    dense = np.zeros((nrows, ncols))
+    for i in range(nrows):
+        for p in range(rows[i], rows[i + 1]):
+            dense[i, cols[p]] += val[p]
+    ref = dense @ vec
+    vb, ri, ci, _, nrb = csr_to_bsr(rows, cols, val.astype(np.float32),
+                                    ncols)
+    out = dae_spmv(jnp.asarray(vb), jnp.asarray(ri), jnp.asarray(ci),
+                   jnp.asarray(vec, dtype=jnp.float32), nrb)[:nrows]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-3, atol=1e-3)
+
+
+# -- gradient compression: bounded error, unbiased with feedback --------------
+
+
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=4,
+                max_size=64))
+def test_quantize_error_bound(vals):
+    from repro.parallel.compress import dequantize, quantize
+    g = jnp.asarray(vals, jnp.float32)
+    q, scale = quantize(g)
+    err = np.abs(np.asarray(dequantize(q, scale) - g))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    from repro.parallel.compress import dequantize, quantize
+    r = np.random.default_rng(0)
+    g = jnp.asarray(r.standard_normal(256) * 0.01 + 3.0, jnp.float32)
+    residual = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    steps = 50
+    for _ in range(steps):
+        gf = g + residual
+        q, s = quantize(gf)
+        deq = dequantize(q, s)
+        residual = gf - deq
+        acc = acc + deq
+    bias = np.abs(np.asarray(acc / steps - g)).mean()
+    q1, s1 = quantize(g)
+    one_shot = np.abs(np.asarray(dequantize(q1, s1) - g)).mean()
+    assert bias < one_shot  # feedback averages out quantization error

@@ -1,0 +1,44 @@
+"""Batched serving loop: continuous batching with slot refill."""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.runtime.serve_loop import Request, ServeLoop
+
+
+def test_serve_loop_completes_all_requests():
+    cfg = get_config("qwen3-4b", smoke=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    loop = ServeLoop(cfg, m, params, batch_slots=2, s_max=64)
+    reqs = [Request(rid=i,
+                    prompt=np.array([1 + i, 2 + i, 3 + i], np.int64),
+                    max_new=4)
+            for i in range(5)]  # 5 requests > 2 slots -> forces refill
+    results = loop.run(reqs)
+    assert set(results) == {0, 1, 2, 3, 4}
+    for rid, toks in results.items():
+        assert 1 <= len(toks) <= 4
+        assert all(0 <= t < cfg.vocab for t in toks)
+
+
+def test_serve_greedy_matches_apply():
+    """Slot-pooled decode must equal unbatched greedy decoding."""
+    import jax.numpy as jnp
+    cfg = get_config("qwen3-4b", smoke=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    prompt = np.array([5, 9, 2], np.int64)
+
+    # reference: argmax continuation via full re-apply
+    toks = list(prompt)
+    for _ in range(3):
+        logits = m.apply(params, jnp.asarray([toks], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    ref = toks[len(prompt):]
+
+    loop = ServeLoop(cfg, m, params, batch_slots=1, s_max=32)
+    out = loop.run([Request(rid=0, prompt=prompt, max_new=3)])[0]
+    assert out == ref

@@ -1,0 +1,165 @@
+"""DAE programming-model + simulator semantics (paper §3/§5.1)."""
+
+import pytest
+
+from repro.core.dae import (ConservationError, DaeProgram, Delay, Deq, Enq,
+                            LoadChannel, Process, Req, Resp, Store, StoreWait,
+                            StreamChannel)
+from repro.core.simulator import (DeadlockError, FixedLatencyMemory, Fused,
+                                  MomsMemory, Par, simulate)
+
+
+def run(procs, data=None, latency=100, ports=("mem",)):
+    mems = {p: FixedLatencyMemory(list(data or range(100)), latency)
+            for p in ports}
+    mems["out"] = FixedLatencyMemory([None] * 64, latency)
+    return simulate(DaeProgram("t", procs), mems)
+
+
+def test_blocking_load_costs_latency():
+    ch = LoadChannel("c", capacity=4)
+
+    def gen():
+        yield Req(ch, 3)
+        v = yield Resp(ch)
+        yield Store("out", 0, v)
+
+    r = run([Process("p", gen())])
+    assert r.stores["out"][0] == 3
+    # issue(1) + latency(100) + store; end includes write response
+    assert 100 <= r.cycles <= 210
+
+
+def test_pipelined_requests_hide_latency():
+    ch = LoadChannel("c", capacity=128)
+    n = 64
+
+    def req():
+        for i in range(n):
+            yield Req(ch, i)
+
+    def resp():
+        for i in range(n):
+            yield Fused(Resp(ch), lambda v, i=i: Store("out", i, v))
+
+    r = run([Process("a", req()), Process("e", resp())], latency=100)
+    # decoupled: ~latency + n, NOT n * latency
+    assert r.cycles < 100 + n + 120
+    assert r.stores["out"][n - 1] == n - 1
+
+
+def test_request_response_conservation_enforced():
+    ch = LoadChannel("c", capacity=8)
+
+    def bad():
+        yield Req(ch, 0)
+        yield Req(ch, 1)
+        _ = yield Resp(ch)  # second response never consumed
+
+    with pytest.raises(ConservationError):
+        run([Process("p", bad())])
+
+
+def test_stream_enq_deq_order():
+    st = StreamChannel("s", capacity=4)
+
+    def prod():
+        for i in (5, 3, 9):
+            yield Enq(st, i)
+
+    got = []
+
+    def cons():
+        for _ in range(3):
+            v = yield Deq(st)
+            got.append(v)
+
+    run([Process("p", prod()), Process("c", cons())])
+    assert got == [5, 3, 9]
+
+
+def test_capacity_blocks_producer():
+    st = StreamChannel("s", capacity=2)
+
+    def prod():
+        for i in range(4):
+            yield Enq(st, i)
+
+    def cons():
+        yield Delay(1000)
+        for _ in range(4):
+            yield Deq(st)
+
+    r = run([Process("p", prod()), Process("c", cons())])
+    assert r.cycles >= 1000  # producer had to wait for consumer
+
+
+def test_deadlock_detection():
+    a = StreamChannel("a", capacity=1)
+    b = StreamChannel("b", capacity=1)
+
+    def p1():
+        _ = yield Deq(a)
+        yield Enq(b, 1)
+
+    def p2():
+        _ = yield Deq(b)
+        yield Enq(a, 1)
+
+    with pytest.raises(DeadlockError):
+        run([Process("p1", p1()), Process("p2", p2())])
+
+
+def test_par_same_cycle():
+    c1 = LoadChannel("c1", capacity=4, port="mem")
+    c2 = LoadChannel("c2", capacity=4, port="mem2")
+
+    def gen():
+        yield Par([Req(c1, 1), Req(c2, 2)])
+        vals = yield Par([Resp(c1), Resp(c2)])
+        yield Store("out", 0, tuple(vals))
+
+    r = run([Process("p", gen())], ports=("mem", "mem2"))
+    assert r.stores["out"][0] == (1, 2)
+
+
+def test_store_wait_blocks_until_write_response():
+    def gen():
+        yield Store("out", 0, 42)
+        yield StoreWait("out")
+        yield Delay(1)
+
+    r = run([Process("p", gen())], latency=77)
+    assert r.cycles >= 77
+
+
+def test_moms_coalescing_and_cache():
+    mem = MomsMemory(list(range(1024)), line_words=16)
+    t1, v = mem.access(0, 0.0)
+    assert v == 0
+    t2, _ = mem.access(1, 0.0)        # same line, in flight -> coalesced
+    assert t2 <= t1 + 1
+    t3, _ = mem.access(2, t1 + 10)    # landed -> cache hit
+    assert t3 - (t1 + 10) == mem.hit_latency
+    assert mem.stats["coalesced"] == 1
+    assert mem.stats["hits"] == 1
+
+
+def test_outstanding_cap_throttles():
+    ch = LoadChannel("c", capacity=1000)
+    n = 200
+
+    def req():
+        for i in range(n):
+            yield Req(ch, i % 64)
+
+    def resp():
+        for _ in range(n):
+            yield Resp(ch)
+
+    mems = {"mem": FixedLatencyMemory(list(range(64)), 100, max_outstanding=4),
+            "out": FixedLatencyMemory([None], 100)}
+    r = simulate(DaeProgram("t", [Process("a", req()),
+                                  Process("e", resp())]), mems)
+    # 4 outstanding with latency 100 -> throughput 4/100
+    assert r.cycles > n / (4 / 100) * 0.8

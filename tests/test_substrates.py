@@ -1,0 +1,170 @@
+"""Data pipeline, optimizer, checkpointing, fault-tolerant runtime."""
+
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data import PrefetchLoader, SyntheticLM
+from repro.optim import AdamW, warmup_cosine
+from repro.runtime import StragglerMonitor, TrainLoopConfig, fit
+from repro.runtime.train_loop import StepFailure
+
+
+# -- data ---------------------------------------------------------------------
+
+
+def test_synthetic_determinism():
+    ds = SyntheticLM(vocab=100, seq_len=16, global_batch=4, seed=7)
+    a = ds.batch_at(12)
+    b = ds.batch_at(12)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["labels"][0, -1] == -1
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_prefetch_loader_order_and_close():
+    ds = SyntheticLM(vocab=50, seq_len=4, global_batch=2)
+
+    def gen():
+        for i in range(5):
+            yield i
+
+    loader = PrefetchLoader(gen(), capacity=2)
+    assert list(loader) == [0, 1, 2, 3, 4]
+    loader.close()
+    del ds
+
+
+# -- optimizer ----------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, gnorm = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+    assert float(gnorm) >= 0
+
+
+def test_grad_clip():
+    opt = AdamW(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, state, gnorm = opt.update({"w": jnp.full(3, 100.0)}, state, params)
+    assert float(gnorm) > 1.0  # reported pre-clip norm
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, 10, 100)
+    assert float(lr(jnp.array(0))) == 0.0
+    assert abs(float(lr(jnp.array(10))) - 1.0) < 1e-5
+    assert float(lr(jnp.array(100))) < float(lr(jnp.array(50)))
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)},
+            "seg": [jnp.zeros(2), jnp.full(2, 7.0)]}
+    save_pytree(tmp_path / "x.npz", tree, meta={"step": 5})
+    like = jax.eval_shape(lambda: tree)
+    out, meta = load_pytree(tmp_path / "x.npz", like)
+    assert meta["step"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert not list(tmp_path.glob("*.tmp"))  # atomic: no leftovers
+
+
+def test_checkpoint_manager_retention_and_resume(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=False)
+    state = {"w": jnp.zeros(4)}
+    for s in (10, 20, 30):
+        mgr.save(s, {"w": jnp.full(4, float(s))})
+    assert mgr.latest_step() == 30
+    assert len(list(Path(tmp_path).glob("step_*.npz"))) == 2  # retention
+    step, restored, meta = mgr.restore_latest(jax.eval_shape(lambda: state))
+    assert step == 30
+    np.testing.assert_array_equal(np.asarray(restored["w"]), 30.0)
+
+
+# -- fault-tolerant training loop ----------------------------------------------
+
+
+def _tiny_setup():
+    from repro.configs import get_config
+    from repro.launch.steps import make_train_step
+    from repro.models.registry import build_model
+    cfg = get_config("qwen3-4b", smoke=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=3e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=16, global_batch=4)
+    return params, opt.init(params), step, ds
+
+
+def test_fit_loss_decreases(tmp_path):
+    params, opt_state, step, ds = _tiny_setup()
+    cfg = TrainLoopConfig(total_steps=30, ckpt_every=10,
+                          ckpt_dir=str(tmp_path), async_ckpt=False)
+    out = fit(step, params, opt_state, ds.batch_at, cfg)
+    assert out["steps"] == 30
+    assert np.mean(out["losses"][-5:]) < np.mean(out["losses"][:5])
+
+
+def test_fit_recovers_from_failures(tmp_path):
+    params, opt_state, step, ds = _tiny_setup()
+    cfg = TrainLoopConfig(total_steps=20, ckpt_every=5,
+                          ckpt_dir=str(tmp_path), async_ckpt=False)
+    tripped = {"done": False}
+
+    def failure_hook(s):
+        if s == 12 and not tripped["done"]:
+            tripped["done"] = True
+            raise StepFailure("injected node failure at step 12")
+
+    out = fit(step, params, opt_state, ds.batch_at, cfg,
+              failure_hook=failure_hook)
+    assert out["steps"] == 20
+    assert out["restarts"] == 1
+    # resumed from step 10 checkpoint, so steps 10/11 were replayed
+
+
+def test_fit_resumes_across_process_restarts(tmp_path):
+    params, opt_state, step, ds = _tiny_setup()
+    cfg = TrainLoopConfig(total_steps=10, ckpt_every=5,
+                          ckpt_dir=str(tmp_path), async_ckpt=False)
+    fit(step, params, opt_state, ds.batch_at, cfg)
+    # "new process": fresh initial state, must resume at 10 and stop
+    cfg2 = TrainLoopConfig(total_steps=15, ckpt_every=5,
+                           ckpt_dir=str(tmp_path), async_ckpt=False)
+    out = fit(step, params, opt_state, ds.batch_at, cfg2)
+    assert out["steps"] == 15
+    assert len(out["losses"]) == 5  # only 5 new steps run
+
+
+# -- straggler monitor ---------------------------------------------------------
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=3)
+    for s in range(20):
+        dur = 1.0 if s != 15 else 5.0
+        mon.stop(s, duration=dur)
+    assert len(mon.events) == 1
+    assert mon.events[0].step == 15
+    assert mon.events[0].ratio > 2.0
+    # EWMA not polluted by the outlier
+    assert abs(mon.ewma - 1.0) < 0.05

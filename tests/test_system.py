@@ -1,0 +1,53 @@
+"""End-to-end behaviour of the paper's system: explicit decoupling hides
+memory latency across the full stack (programming model -> simulator ->
+TPU kernels -> LM framework hooks)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workloads import run_workload
+
+
+def test_paper_headline_speedup_band():
+    """Table 1's headline: decoupled dynamic HLS gets 10-79x over the
+    static baseline at paper scale for a pointer-chasing workload.  We
+    check the small-scale band is already >= 10x for hashtable (chains
+    are pure latency-bound)."""
+    vit = run_workload("hashtable", "vitis", scale="small").cycles
+    dec = run_workload("hashtable", "rhls_dec", scale="small").cycles
+    assert vit / dec > 10
+
+
+def test_golden_overhead_small_for_streamed_workload():
+    """Fig 4: decoupled designs land near the golden bound once latency
+    is hidden (binsearch_for small-scale: bounded overhead)."""
+    r = run_workload("binsearch_for", "rhls_dec", scale="small",
+                     latency=25, rif=64)
+    assert r.overhead < 1.0  # within 2x of the no-latency bound
+
+
+def test_decoupled_ops_integrate_with_lm():
+    """The framework hook: embedding lookup through the decoupled gather
+    kernel gives identical results to the XLA path."""
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+    cfg_ref = get_config("chameleon-34b", smoke=True, kernel_mode="ref")
+    cfg_dae = get_config("chameleon-34b", smoke=True, kernel_mode="pallas")
+    m_ref, m_dae = build_model(cfg_ref), build_model(cfg_dae)
+    params = m_ref.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                             cfg_ref.vocab)
+    lr = m_ref.apply(params, tok)
+    ld = m_dae.apply(params, tok)
+    np.testing.assert_allclose(np.asarray(lr, np.float32),
+                               np.asarray(ld, np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_rif_plan_is_latency_bandwidth_product():
+    from repro.core.pipeline import plan_rif
+    small = plan_rif(4 * 1024)            # tiny blocks -> many in flight
+    big = plan_rif(4 * 1024 * 1024)       # huge blocks -> few buffers
+    assert small.rif > big.rif
+    assert small.inflight_bytes > 0

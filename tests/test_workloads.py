@@ -1,0 +1,63 @@
+"""The seven paper benchmarks: correctness in every config + the paper's
+qualitative orderings (Table 1 structure) at small scale."""
+
+import pytest
+
+from repro.core.simulator import DeadlockError
+from repro.core.workloads import BENCHMARKS, CONFIGS, run_workload
+
+SMALL = dict(scale="small", latency=100, rif=128)
+
+
+@pytest.mark.parametrize("bench", BENCHMARKS)
+@pytest.mark.parametrize("config", CONFIGS)
+def test_correct_all_cells(bench, config):
+    if config == "rhls_stream" and bench.startswith("mergesort"):
+        with pytest.raises(DeadlockError):
+            run_workload(bench, config, **SMALL)
+        return
+    r = run_workload(bench, config, **SMALL)
+    assert r.correct, f"{bench}/{config} produced wrong results"
+    assert r.cycles > 0
+    assert r.golden > 0
+
+
+@pytest.mark.parametrize("bench", ["binsearch", "hashtable", "spmv"])
+def test_decoupling_speedup_ordering(bench):
+    """vitis > vitis_dec > ~rhls_dec in cycles (paper Table 1)."""
+    vit = run_workload(bench, "vitis", **SMALL).cycles
+    vdec = run_workload(bench, "vitis_dec", **SMALL).cycles
+    rdec = run_workload(bench, "rhls_dec", **SMALL).cycles
+    assert vit > vdec > 0
+    assert vdec >= rdec
+
+
+def test_decoupled_binsearch_hides_latency():
+    """Cycles should track iterations, not iterations x latency — needs
+    enough concurrent chains (paper scale: 1000 lookups >= latency)."""
+    r100 = run_workload("binsearch", "rhls_dec", scale="paper", latency=100,
+                        rif=128)
+    r400 = run_workload("binsearch", "rhls_dec", scale="paper", latency=400,
+                        rif=512)
+    # 4x latency costs far less than 4x cycles once decoupled
+    assert r400.cycles < 1.5 * r100.cycles
+
+
+def test_rif_sweep_monotone():
+    """More requests in flight -> fewer cycles until latency is covered
+    (the paper's 'as many lookups in parallel as the latency' rule)."""
+    cycles = [run_workload("hashtable", "rhls_dec", scale="small",
+                           latency=100, rif=rif).cycles
+              for rif in (2, 8, 32, 128)]
+    assert cycles[0] > cycles[1] > cycles[2] >= cycles[3]
+
+
+def test_moms_memory_mode_runs():
+    r = run_workload("binsearch", "rhls_dec", scale="small", mem="moms")
+    assert r.correct
+
+
+def test_mergesort_opt_saves_cycles():
+    plain = run_workload("mergesort", "rhls_dec", **SMALL).cycles
+    opt = run_workload("mergesort_opt", "rhls_dec", **SMALL).cycles
+    assert opt < plain
