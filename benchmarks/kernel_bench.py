@@ -36,13 +36,47 @@ def run(csv_print) -> None:
         csv_print(f"kernel/rif_sweep/hashtable/rif={rif},0,"
                   f"cycles={res.cycles};golden={res.golden}")
 
-    # gather: decoupled kernel (interpret) vs XLA take
+    # channel-capacity sensitivity sweep (§5.3/§5.4): capacity = rif+slack;
+    # negative slack starves the round-robin chase into the deadlock the
+    # capacity bound exists to prevent
+    from repro.core.simulator import DeadlockError
+    for slack in (-4, 0, 1, 16, 64):
+        try:
+            res = run_workload("hashtable", "rhls_dec", scale="paper",
+                               latency=100, rif=32, cap_slack=slack)
+            derived = f"cycles={res.cycles};golden={res.golden}"
+        except DeadlockError:
+            derived = "cycles=deadlock"
+        csv_print(f"kernel/cap_sweep/hashtable/slack={slack},0,{derived}")
+
+    # gather: decoupled kernel (interpret) vs XLA take.  Knobs are passed
+    # explicitly so these baseline rows never pick up a tuned config from
+    # a previous run's cache.
     from repro.kernels.dae_gather import dae_gather
     table = jnp.asarray(r.standard_normal((4096, 256)), jnp.float32)
     idx = jnp.asarray(r.integers(0, 4096, 512), jnp.int32)
     for method in ("pipelined", "rif", "ref"):
-        us = _time(lambda: dae_gather(table, idx, method=method))
+        us = _time(lambda: dae_gather(table, idx, method=method,
+                                      block_d=512, chunk=64, rif=8))
         csv_print(f"kernel/gather/{method},{us:.0f},interpret_cpu")
+
+    # gather: plan_rif analytic default vs the tuned config the dispatcher
+    # resolves from the repro.tune cache (tuning here on a miss)
+    from repro.core.pipeline import plan_rif
+    from repro.tune import dispatch_config, tune_kernel
+    from repro.kernels.common import resolve_interpret
+    res = tune_kernel("dae_gather", (4096, 256, 512), max_evals=16, reps=2)
+    rif_plan = plan_rif(64 * 256 * 4).rif  # the dispatcher's miss fallback
+    us_default = _time(lambda: dae_gather(table, idx, method="pipelined",
+                                          block_d=512, chunk=64,
+                                          rif=rif_plan))
+    us_tuned = _time(lambda: dae_gather(table, idx))  # consults the cache
+    cfg = dispatch_config("dae_gather", (4096, 256, 512), table.dtype,
+                          resolve_interpret(None))
+    cfg_s = ";".join(f"{k}={v}" for k, v in sorted(cfg.items()))
+    csv_print(f"kernel/gather/plan_default,{us_default:.0f},interpret_cpu")
+    csv_print(f"kernel/gather/tuned,{us_tuned:.0f},"
+              f"{cfg_s};tune_evals={res.evals}")
 
     # merge
     from repro.kernels.dae_merge import merge_sorted

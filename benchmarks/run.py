@@ -5,9 +5,10 @@
     table2_resources  Table 2  (buffer/channel resource analogue)
     table3_moms       Table 3  (MOMS + DRAM memory model subset)
     fig4_golden       Fig. 4   (overhead over the golden reference)
-    kernel_bench      decoupled-kernel microbenches + RIF sweeps
+    kernel_bench      decoupled-kernel microbenches + RIF/capacity sweeps
+    tune              autotune decoupling params, persist the config cache
 
-Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 ...]
+Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 tune ...]
 """
 
 from __future__ import annotations
@@ -44,6 +45,9 @@ def main() -> None:
     if on("kernel"):
         from benchmarks import kernel_bench
         kernel_bench.run(_csv)
+    if on("tune"):
+        from benchmarks import tune
+        tune.run(_csv)
 
 
 if __name__ == "__main__":

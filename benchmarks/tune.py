@@ -1,0 +1,55 @@
+"""Autotuning sweep: search decoupling parameters, persist winners.
+
+``python -m benchmarks.run tune`` tunes
+
+  * the simulator-backed DAE workloads (rif × channel-capacity slack,
+    cycle-count objective) for the paper's pointer-chasing benchmarks;
+  * the Pallas kernels (block shape / ring depth, wall-clock objective)
+    at the shapes kernel_bench measures.
+
+Winners land in the JSON cache (``repro.tune.cache_path()``; override
+with ``$REPRO_TUNE_CACHE``).  A second invocation hits the cache:
+``evals=0;cached=1`` in the output.  ``$REPRO_TUNE_FORCE=1`` re-searches.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def run(csv_print) -> None:
+    from repro.tune import (cache_path, default_cache, tune_kernel,
+                            tune_workload)
+
+    force = bool(os.environ.get("REPRO_TUNE_FORCE"))
+
+    # -- simulator backend: rif × cap_slack per workload --------------------
+    for bench, cfg in (("hashtable", "rhls_dec"),
+                       ("binsearch", "rhls_dec"),
+                       ("spmv", "rhls_dec"),
+                       ("mergesort_opt", "rhls_dec")):
+        res = tune_workload(bench, cfg, scale="small", latency=100,
+                            max_evals=32, force=force)
+        cached = int(res.evals == 0)
+        csv_print(
+            f"tune/workload/{bench}/{cfg},0,"
+            f"best_cycles={res.best_score:.0f};rif={res.best.get('rif')};"
+            f"cap_slack={res.best.get('cap_slack')};"
+            f"seed_cycles={res.seed_score:.0f};evals={res.evals};"
+            f"cached={cached}")
+
+    # -- wall-clock backend: kernel block shapes / ring depth ---------------
+    for op, dims in (("dae_gather", (4096, 256, 512)),
+                     ("dae_merge", (2048, 2048)),
+                     ("batched_searchsorted", (4096, 256))):
+        res = tune_kernel(op, dims, max_evals=16, reps=2, force=force)
+        cached = int(res.evals == 0)
+        best = ";".join(f"{k}={v}" for k, v in sorted(res.best.items()))
+        csv_print(
+            f"tune/kernel/{op},{res.best_score * 1e6:.0f},"
+            f"{best};seed_us={res.seed_score * 1e6:.0f};"
+            f"evals={res.evals};cached={cached}")
+
+    cache = default_cache()
+    csv_print(f"tune/cache,0,path={cache_path()};entries={len(cache)};"
+              f"hits={cache.hits};misses={cache.misses}")

@@ -197,13 +197,130 @@ class DaeProgram:
     # scheduler, declared here so programs are self-describing.
     ports: Tuple[str, ...] = ("mem",)
 
-    def validate_channels(self) -> None:
+    def validate_channels(
+        self,
+        memories: Optional[Dict[str, Any]] = None,
+        max_steps: int = 1_000_000,
+    ) -> Dict[str, Channel]:
+        """Discover every channel via a functional (zero-latency,
+        unbounded-capacity) dry run and reject conflicting declarations.
+
+        Channels are created dynamically, so static inspection cannot see
+        them; instead the program is executed functionally — loads answer
+        immediately from ``memories`` (``{port: indexable}``; absent ports
+        serve 0), capacities never block.  Two distinct channel objects
+        sharing a name must agree on type and capacity, otherwise the
+        timed simulation would silently bind both to one FIFO whose
+        capacity depends on scheduling order — that is the §5.3/§5.4
+        misconfiguration this check exists to catch.
+
+        Returns ``{name: channel}``.  Raises :class:`ValueError` on a
+        conflict and :class:`ConservationError` if the dry run stalls or
+        ends with undrained channels (§5.1).
+
+        Note: the dry run *consumes* the process generators; validate a
+        freshly built program, then rebuild it before simulating.
+        """
+        from repro.core.simulator import Fused, Par  # deferred: no cycle
+
+        memories = memories or {}
         seen: Dict[str, Channel] = {}
-        for p in self.processes:
-            del p
-        # channels are discovered dynamically during execution; nothing to
-        # do statically.  Kept for API symmetry.
-        del seen
+        fifos: Dict[str, List[Any]] = {}
+
+        def note(ch: Channel) -> None:
+            prev = seen.get(ch.name)
+            if prev is None:
+                seen[ch.name] = ch
+            elif prev is not ch and (type(prev) is not type(ch)
+                                     or prev.capacity != ch.capacity):
+                raise ValueError(
+                    f"channel {ch.name!r} declared twice with conflicting "
+                    f"{type(prev).__name__}(capacity={prev.capacity}) vs "
+                    f"{type(ch).__name__}(capacity={ch.capacity})")
+
+        def ready(eff: Any) -> bool:
+            if isinstance(eff, (Resp, Deq)):
+                note(eff.channel)
+                return bool(fifos.get(eff.channel.name))
+            if isinstance(eff, Par):
+                return all(ready(s) for s in eff.effects)
+            if isinstance(eff, Fused):
+                return ready(eff.first)
+            return True
+
+        def run(eff: Any) -> Any:
+            if isinstance(eff, Req):
+                note(eff.channel)
+                data = memories.get(eff.channel.port)
+                value = data[eff.addr] if data is not None else 0
+                fifos.setdefault(eff.channel.name, []).append(value)
+                return None
+            if isinstance(eff, (Resp, Deq)):
+                note(eff.channel)
+                return fifos[eff.channel.name].pop(0)
+            if isinstance(eff, Enq):
+                note(eff.channel)
+                fifos.setdefault(eff.channel.name, []).append(eff.value)
+                return None
+            if isinstance(eff, Par):
+                return tuple(run(s) for s in eff.effects)
+            if isinstance(eff, Fused):
+                value = run(eff.first)
+                follow = eff.then(value)
+                if follow is not None:
+                    if not ready(follow):
+                        # §simulator contract: the follow-up must be
+                        # non-blocking by construction
+                        raise ConservationError(
+                            f"{self.name}: Fused follow-up {follow!r} "
+                            f"would block (empty channel) — fused effects "
+                            f"must be non-blocking by construction")
+                    run(follow)
+                return value
+            return None  # Delay / Store / StoreWait / Halt
+
+        gens = [(p.name, p.gen) for p in self.processes]
+        steps = 0
+
+        def advance(i: int, send: Any) -> Any:
+            """Resume process i; its next effect, or None when finished."""
+            nonlocal steps
+            steps += 1
+            if steps > max_steps:
+                raise ConservationError(
+                    f"{self.name}: dry run exceeded {max_steps} steps")
+            try:
+                return gens[i][1].send(send)
+            except StopIteration:
+                return None
+
+        pending = {i: advance(i, None) for i in range(len(gens))}
+        pending = {i: e for i, e in pending.items() if e is not None}
+        while pending:
+            progressed = False
+            for i in list(pending):
+                eff = pending[i]
+                while eff is not None and ready(eff):
+                    progressed = True
+                    if isinstance(eff, Halt):
+                        eff = None
+                        break
+                    eff = advance(i, run(eff))
+                if eff is None:
+                    pending.pop(i)
+                else:
+                    pending[i] = eff
+            if pending and not progressed:
+                stuck = [gens[i][0] for i in pending]
+                raise ConservationError(
+                    f"{self.name}: functional dry run stalled "
+                    f"(processes {stuck} blocked on empty channels)")
+        leftover = {n: len(f) for n, f in fifos.items() if f}
+        if leftover:
+            raise ConservationError(
+                f"{self.name}: dry run ended with undrained channels "
+                f"{leftover}")
+        return seen
 
 
 # ---------------------------------------------------------------------------

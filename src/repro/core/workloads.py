@@ -410,7 +410,14 @@ def _stream_chase(
 # ---------------------------------------------------------------------------
 
 
-def _binsearch_phases(data, config, early, latency, rif, mem_factory):
+def _chan_cap(rif: int, cap: Optional[int]) -> int:
+    """Channel capacity: explicit override (the tuner's knob) or the
+    legacy rif+1 sizing."""
+    return cap if cap is not None else rif + 1
+
+
+def _binsearch_phases(data, config, early, latency, rif, mem_factory,
+                      cap=None):
     arr, keys, n = data["arr"], data["keys"], data["n"]
     iters_fixed = int(math.ceil(math.log2(n)))
     mems = {
@@ -458,8 +465,8 @@ def _binsearch_phases(data, config, early, latency, rif, mem_factory):
         out = res if early else lo
         return i, out, (i, key, lo, hi, res, it + 1), _mid(lo, hi)
 
-    ch = LoadChannel("bs_load", capacity=rif + 1, port="table")
-    st = StreamChannel("bs_state", capacity=rif + 1)
+    ch = LoadChannel("bs_load", capacity=_chan_cap(rif, cap), port="table")
+    st = StreamChannel("bs_state", capacity=_chan_cap(rif, cap))
 
     if config in ("vitis", "rhls"):
         ovh = VITIS_OVH if config == "vitis" else 0
@@ -486,7 +493,7 @@ def _binsearch_phases(data, config, early, latency, rif, mem_factory):
             res, loads = binsearch_ref(arr, keys, True)
         else:
             res, loads = binsearch_ref(arr, keys, False)
-        vst = StreamChannel("bs_vals", capacity=rif + 1)
+        vst = StreamChannel("bs_vals", capacity=_chan_cap(rif, cap))
         a, e = _stream_chase(ch, vst, st, len(keys), loads, init_state, step,
                              "out", rif)
         procs = [Process("access", a()), Process("execute", e())]
@@ -507,7 +514,7 @@ def _binsearch_phases(data, config, early, latency, rif, mem_factory):
 # ---------------------------------------------------------------------------
 
 
-def _hashtable_phases(data, config, latency, rif, mem_factory):
+def _hashtable_phases(data, config, latency, rif, mem_factory, cap=None):
     entries, keys, heads = data["entries"], data["keys"], data["heads"]
     chain_len = data["chain_len"]
     mems = {
@@ -540,8 +547,8 @@ def _hashtable_phases(data, config, latency, rif, mem_factory):
         naddr = nxt if nxt >= 0 else idx
         return i, res, (i, key, res, naddr), naddr
 
-    ch = LoadChannel("ht_load", capacity=rif + 1, port="table")
-    st = StreamChannel("ht_state", capacity=rif + 1)
+    ch = LoadChannel("ht_load", capacity=_chan_cap(rif, cap), port="table")
+    st = StreamChannel("ht_state", capacity=_chan_cap(rif, cap))
 
     if config in ("vitis", "rhls"):
         ovh = VITIS_OVH if config == "vitis" else 0
@@ -566,7 +573,7 @@ def _hashtable_phases(data, config, latency, rif, mem_factory):
         procs = [Process("roundrobin", gen())]
     elif config == "rhls_stream":
         expected, loads = hashtable_ref(entries, keys, heads)
-        vst = StreamChannel("ht_vals", capacity=rif + 1)
+        vst = StreamChannel("ht_vals", capacity=_chan_cap(rif, cap))
         a, e = _stream_chase(ch, vst, st, len(keys), loads, init_state, step,
                              "out", rif)
         procs = [Process("access", a()), Process("execute", e())]
@@ -588,7 +595,7 @@ def _hashtable_phases(data, config, latency, rif, mem_factory):
 
 
 def _spmv_program(rows, cols, val, vec_data, out_data, config, latency, rif,
-                  mem_factory, tag="spmv", store_gate=0):
+                  mem_factory, tag="spmv", store_gate=0, cap=None):
     """Build one SPMV DaeProgram writing results to out_data via port 'out'."""
     nrows = len(rows) - 1
     nnz = int(rows[-1])
@@ -597,12 +604,14 @@ def _spmv_program(rows, cols, val, vec_data, out_data, config, latency, rif,
     # Buffer sizing mirrors the paper's profile-guided approach (§6): the
     # val responses are consumed one val->vec round trip (~2x latency)
     # after issue, so that channel's buffer must cover the lag.
-    rows_ch = LoadChannel(f"{tag}_rows", capacity=rif + 1, port="rows")
-    val_ch = LoadChannel(f"{tag}_val", capacity=max(rif + 1, 2 * latency + 8),
-                         port="val")
-    cols_ch = LoadChannel(f"{tag}_cols", capacity=rif + 1, port="cols")
-    vec_ch = LoadChannel(f"{tag}_vec", capacity=max(rif + 1, latency + 8),
-                         port="vec")
+    c = _chan_cap(rif, cap)
+    # with an explicit capacity the tuner owns the profile floors too
+    val_cap = c if cap is not None else max(c, 2 * latency + 8)
+    vec_cap = c if cap is not None else max(c, latency + 8)
+    rows_ch = LoadChannel(f"{tag}_rows", capacity=c, port="rows")
+    val_ch = LoadChannel(f"{tag}_val", capacity=val_cap, port="val")
+    cols_ch = LoadChannel(f"{tag}_cols", capacity=c, port="cols")
+    vec_ch = LoadChannel(f"{tag}_vec", capacity=vec_cap, port="vec")
     bounds_exec = StreamChannel(f"{tag}_bexec", capacity=nrows + 2)
     bounds_addr = StreamChannel(f"{tag}_baddr", capacity=nrows + 2)
 
@@ -705,12 +714,12 @@ def _spmv_program(rows, cols, val, vec_data, out_data, config, latency, rif,
     return DaeProgram(f"{tag}[{config}]", procs), mems
 
 
-def _spmv_phases(data, config, latency, rif, mem_factory):
+def _spmv_phases(data, config, latency, rif, mem_factory, cap=None):
     rows, cols, val, vec = data["rows"], data["cols"], data["val"], data["vec"]
     vec_data = list(float(x) for x in vec)
     out_data = [0.0] * data["nrows"]
     prog, mems = _spmv_program(rows, cols, val, vec_data, out_data, config,
-                               latency, rif, mem_factory)
+                               latency, rif, mem_factory, cap=cap)
     expected = spmv_ref(rows, cols, val, vec)
 
     def check(result: SimResult) -> bool:
@@ -727,7 +736,7 @@ def _spmv_phases(data, config, latency, rif, mem_factory):
 
 
 def _merge_pass_program(src_data, dst_data, n, width, config, latency, rif,
-                        mem_factory, src_port, dst_port):
+                        mem_factory, src_port, dst_port, cap=None):
     """One bottom-up pass: merge width-runs of src into 2*width-runs of dst."""
     merges = []
     lo = 0
@@ -737,9 +746,9 @@ def _merge_pass_program(src_data, dst_data, n, width, config, latency, rif,
 
     # Vitis burst_maxi: only one request/response pair outstanding per
     # pointer at a time for data-dependent consumption order (§5.2)
-    cap = 1 if config == "vitis_dec" else rif + 1
-    i_ch = LoadChannel(f"ms_i_{src_port}", capacity=cap, port=src_port)
-    j_ch = LoadChannel(f"ms_j_{src_port}", capacity=cap, port=src_port)
+    ch_cap = 1 if config == "vitis_dec" else _chan_cap(rif, cap)
+    i_ch = LoadChannel(f"ms_i_{src_port}", capacity=ch_cap, port=src_port)
+    j_ch = LoadChannel(f"ms_j_{src_port}", capacity=ch_cap, port=src_port)
 
     mems = {
         src_port: mem_factory(src_port, src_data),
@@ -835,8 +844,9 @@ def _merge_pass_program(src_data, dst_data, n, width, config, latency, rif,
 
 
 def _copy_pass_program(src_data, dst_data, n, config, latency, rif,
-                       mem_factory, src_port, dst_port):
-    ch = LoadChannel(f"cp_{src_port}", capacity=rif + 1, port=src_port)
+                       mem_factory, src_port, dst_port, cap=None):
+    ch = LoadChannel(f"cp_{src_port}", capacity=_chan_cap(rif, cap),
+                     port=src_port)
     mems = {
         src_port: mem_factory(src_port, src_data),
         dst_port: mem_factory(dst_port, dst_data),
@@ -865,7 +875,7 @@ def _copy_pass_program(src_data, dst_data, n, config, latency, rif,
     )
 
 
-def _mergesort_phases(data, config, opt, latency, rif, mem_factory):
+def _mergesort_phases(data, config, opt, latency, rif, mem_factory, cap=None):
     n = data["n"]
     table = [int(x) for x in data["table"]]
     result = [0] * n
@@ -905,10 +915,11 @@ def _mergesort_phases(data, config, opt, latency, rif, mem_factory):
         for kind, s, d, w, sp, dp in phases:
             if kind == "merge":
                 out.append(_merge_pass_program(s, d, n, w, config, latency,
-                                               rif, mem_factory, sp, dp))
+                                               rif, mem_factory, sp, dp,
+                                               cap=cap))
             else:
                 out.append(_copy_pass_program(s, d, n, config, latency, rif,
-                                              mem_factory, sp, dp))
+                                              mem_factory, sp, dp, cap=cap))
         return out
 
     def check(_result) -> bool:
@@ -923,7 +934,7 @@ def _mergesort_phases(data, config, opt, latency, rif, mem_factory):
 # ---------------------------------------------------------------------------
 
 
-def _multispmv_phases(data, config, latency, rif, mem_factory):
+def _multispmv_phases(data, config, latency, rif, mem_factory, cap=None):
     rows, cols, val = data["rows"], data["cols"], data["val"]
     nrows, nnz, iters, alpha = (data["nrows"], data["nnz"], data["iters"],
                                 data["alpha"])
@@ -936,9 +947,11 @@ def _multispmv_phases(data, config, latency, rif, mem_factory):
         for it in range(iters):
             progs.append(_spmv_program(rows, cols, val, vec_data, out_data,
                                        config, latency, rif, mem_factory,
-                                       tag=f"mspmv{it}", store_gate=store_gate))
+                                       tag=f"mspmv{it}", store_gate=store_gate,
+                                       cap=cap))
             progs.append(_scale_copy_program(out_data, vec_data, nrows, alpha,
-                                             config, latency, rif, mem_factory))
+                                             config, latency, rif, mem_factory,
+                                             cap=cap))
         return progs
 
     expected = multispmv_ref(rows, cols, val, data["vec"], iters, alpha)
@@ -952,8 +965,8 @@ def _multispmv_phases(data, config, latency, rif, mem_factory):
 
 
 def _scale_copy_program(out_data, vec_data, n, alpha, config, latency, rif,
-                        mem_factory):
-    ch = LoadChannel("msc_out", capacity=rif + 1, port="outr")
+                        mem_factory, cap=None):
+    ch = LoadChannel("msc_out", capacity=_chan_cap(rif, cap), port="outr")
     mems = {
         "outr": mem_factory("outr", out_data),
         "vecw": mem_factory("vecw", vec_data),
@@ -980,7 +993,7 @@ def _scale_copy_program(out_data, vec_data, n, alpha, config, latency, rif,
     extra_hop = 1 if config == "rhls_stream" else 0
 
     def p_copy_stream():
-        vst = StreamChannel("msc_vst", capacity=rif + 1)
+        vst = StreamChannel("msc_vst", capacity=_chan_cap(rif, cap))
         # emulated as II=2: resp->enq then deq->store in one unit
         for k in range(n):
             v = yield Resp(ch)
@@ -1050,10 +1063,18 @@ def run_workload(
     rif: int = 128,
     max_outstanding: Optional[int] = None,
     seed: int = 0,
+    cap_slack: Optional[int] = None,
 ) -> WorkloadReport:
-    """Build and simulate one (benchmark, config) cell of Table 1/3."""
+    """Build and simulate one (benchmark, config) cell of Table 1/3.
+
+    ``cap_slack`` overrides the channel-capacity sizing: when given,
+    load/stream channels get ``capacity = rif + cap_slack`` instead of
+    the legacy per-benchmark defaults.  This is the knob ``repro.tune``
+    sweeps; too-small values reproduce the §5.3 deadlocks.
+    """
     if config not in CONFIGS:
         raise ValueError(f"unknown config {config!r}")
+    cap = None if cap_slack is None else max(1, rif + cap_slack)
     mem_factory = _mem_factory_for(mem, latency, max_outstanding,
                                    MOMS_PORTS.get(benchmark, ()))
 
@@ -1061,7 +1082,7 @@ def run_workload(
         data = make_binsearch_data(scale, seed)
         early = benchmark == "binsearch"
         progs, mems, golden, check = _binsearch_phases(
-            data, config, early, latency, rif, mem_factory)
+            data, config, early, latency, rif, mem_factory, cap=cap)
         total = 0
         result = None
         for prog in progs:
@@ -1074,7 +1095,7 @@ def run_workload(
     if benchmark == "hashtable":
         data = make_hashtable_data(scale, seed)
         progs, mems, golden, check = _hashtable_phases(
-            data, config, latency, rif, mem_factory)
+            data, config, latency, rif, mem_factory, cap=cap)
         total = 0
         result = None
         for prog in progs:
@@ -1087,7 +1108,7 @@ def run_workload(
     if benchmark == "spmv":
         data = make_spmv_data(scale if scale != "paper" else "paper", seed)
         cells, golden, check = _spmv_phases(data, config, latency, rif,
-                                            mem_factory)
+                                            mem_factory, cap=cap)
         total = 0
         reads: Dict[str, int] = {}
         for prog, mems in cells:
@@ -1102,7 +1123,7 @@ def run_workload(
         data = make_mergesort_data(scale, seed)
         opt = benchmark == "mergesort_opt"
         build, golden, check = _mergesort_phases(data, config, opt, latency,
-                                                 rif, mem_factory)
+                                                 rif, mem_factory, cap=cap)
         if golden is None:  # rhls_stream structural deadlock
             build()  # raises DeadlockError
         total = 0
@@ -1119,7 +1140,7 @@ def run_workload(
         data = make_multispmv_data("paper" if scale in ("paper", "fig4") else scale,
                                    seed)
         build, golden, check = _multispmv_phases(data, config, latency, rif,
-                                                 mem_factory)
+                                                 mem_factory, cap=cap)
         total = 0
         reads = {}
         for prog, mems in build():

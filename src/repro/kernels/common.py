@@ -12,7 +12,8 @@ from typing import Optional
 
 import jax
 
-__all__ = ["cdiv", "round_up", "resolve_interpret", "MXU_LANE", "VMEM_BYTES"]
+__all__ = ["cdiv", "round_up", "resolve_interpret", "tuned_knobs",
+           "MXU_LANE", "VMEM_BYTES"]
 
 # TPU v5e hardware shape constants (see benchmarks/hw.py for the full set)
 MXU_LANE = 128          # lane dimension granularity
@@ -35,3 +36,16 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     if os.environ.get("REPRO_FORCE_INTERPRET"):
         return True
     return jax.default_backend() != "tpu"
+
+
+def tuned_knobs(op: str, dims, dtype, interpret: bool, **defaults):
+    """Resolve a dispatcher's ``None`` knobs: tune-cache winner first,
+    caller-supplied analytic default second.
+
+    ``defaults`` maps knob name -> (caller value, fallback); a caller
+    value of ``None`` means "not specified".  Returns the filled dict.
+    """
+    from repro.tune import dispatch_config  # deferred: kernels <-> tune
+    cfg = dispatch_config(op, dims, dtype, interpret)
+    return {k: (v if v is not None else cfg.get(k, fb))
+            for k, (v, fb) in defaults.items()}

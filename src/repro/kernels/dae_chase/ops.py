@@ -28,7 +28,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.common import (cdiv, resolve_interpret, round_up,
+                                  tuned_knobs)
 from repro.kernels.dae_gather.ops import dae_gather
 
 
@@ -60,12 +61,17 @@ def _searchsorted_impl(table, keys, *, block, interpret, method):
 
 
 def batched_searchsorted(table: jax.Array, keys: jax.Array, *,
-                         block: int = 128, method: str = "pallas",
+                         block: Optional[int] = None, method: str = "pallas",
                          interpret: Optional[bool] = None) -> jax.Array:
     """'right' insertion points of ``keys`` in sorted ``table`` via
-    decoupled block probes."""
-    return _searchsorted_impl(table, keys, block=block,
-                              interpret=resolve_interpret(interpret),
+    decoupled block probes.  ``block=None`` resolves via the tune cache
+    (falling back to the 128-lane DMA granule)."""
+    interp = resolve_interpret(interpret)
+    if block is None:
+        block = tuned_knobs("batched_searchsorted",
+                            (table.shape[0], keys.shape[0]), table.dtype,
+                            interp, block=(None, 128))["block"]
+    return _searchsorted_impl(table, keys, block=block, interpret=interp,
                               method=method)
 
 

@@ -3,6 +3,10 @@
 Handles shape padding, method dispatch, and the ref fallback used by the
 dry-run path (``method='ref'``) where the compiled HLO must reflect the
 XLA gather the roofline accounts for.
+
+Knobs left at ``None`` resolve through ``repro.tune``: a cached tuned
+config for this (shape, dtype, backend) wins, otherwise the analytic
+``plan_rif`` latency×bandwidth plan sizes the ring.
 """
 
 from __future__ import annotations
@@ -13,7 +17,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.common import (cdiv, resolve_interpret, round_up,
+                                  tuned_knobs)
 from repro.kernels.dae_gather import kernel as _k
 from repro.kernels.dae_gather.ref import gather_ref
 
@@ -58,10 +63,10 @@ def dae_gather(
     table: jax.Array,
     idx: jax.Array,
     *,
-    method: str = "pipelined",
+    method: Optional[str] = None,
     block_d: Optional[int] = None,
-    chunk: int = 64,
-    rif: int = 8,
+    chunk: Optional[int] = None,
+    rif: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Decoupled gather of ``table`` (N, D) rows at ``idx`` (M,) -> (M, D).
@@ -69,7 +74,24 @@ def dae_gather(
     method='pipelined': scalar-prefetch indexed BlockSpec (RIF = pipeline
     double-buffering); method='rif': explicit multi-buffer DMA ring with
     ``rif`` requests in flight; method='ref': jnp oracle (XLA gather).
+
+    Knobs left ``None`` resolve via the tune cache, then ``plan_rif``.
     """
+    interp = resolve_interpret(interpret)
+    n, d = table.shape
+    if method is None or block_d is None or chunk is None or rif is None:
+        knobs = tuned_knobs("dae_gather", (n, d, idx.shape[0]), table.dtype,
+                            interp, method=(method, "pipelined"),
+                            block_d=(block_d, None), chunk=(chunk, 64),
+                            rif=(rif, None))
+        method, block_d, chunk = knobs["method"], knobs["block_d"], \
+            knobs["chunk"]
+        rif = knobs["rif"]
+        if rif is None:  # analytic fallback: ring covers latency×BW
+            # deferred: repro.core.__init__ -> decouple -> this module
+            # would cycle on a top-level repro.core.pipeline import
+            from repro.core.pipeline import plan_rif
+            dp = round_up(max(d, 1), 128)
+            rif = plan_rif(chunk * dp * table.dtype.itemsize).rif
     return _dae_gather_impl(table, idx, method=method, block_d=block_d,
-                            chunk=chunk, rif=rif,
-                            interpret=resolve_interpret(interpret))
+                            chunk=chunk, rif=rif, interpret=interp)

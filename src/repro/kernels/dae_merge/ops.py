@@ -9,7 +9,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.common import (cdiv, resolve_interpret, round_up,
+                                  tuned_knobs)
 from repro.kernels.dae_merge import kernel as _k
 
 
@@ -71,17 +72,23 @@ def _merge_impl(a, b, *, tile, interpret, method):
     return out[:total]
 
 
-def merge_sorted(a: jax.Array, b: jax.Array, *, tile: int = 256,
+def merge_sorted(a: jax.Array, b: jax.Array, *, tile: Optional[int] = None,
                  method: str = "pallas",
                  interpret: Optional[bool] = None) -> jax.Array:
-    """Merge two sorted 1-D arrays (decoupled merge-path kernel)."""
+    """Merge two sorted 1-D arrays (decoupled merge-path kernel).
+
+    ``tile=None`` resolves via the tune cache (falling back to 256).
+    """
     if a.dtype != b.dtype:
         raise TypeError(f"dtype mismatch: {a.dtype} vs {b.dtype}")
+    interpret = resolve_interpret(interpret)
+    if tile is None:
+        tile = tuned_knobs("dae_merge", (a.shape[0], b.shape[0]), a.dtype,
+                           interpret, tile=(None, 256))["tile"]
     tile = min(tile, 1 << max(1, (a.shape[0] + b.shape[0] - 1).bit_length()))
     # tile must be a power of two for the bitonic network
     tile = 1 << (tile.bit_length() - 1)
-    return _merge_impl(a, b, tile=tile, interpret=resolve_interpret(interpret),
-                       method=method)
+    return _merge_impl(a, b, tile=tile, interpret=interpret, method=method)
 
 
 def merge_sort(x: jax.Array, *, tile: int = 256, method: str = "pallas",

@@ -9,13 +9,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.common import (cdiv, resolve_interpret, round_up,
+                                  tuned_knobs)
 from repro.kernels.dae_spmv import kernel as _k
 from repro.kernels.dae_spmv.ref import bsr_spmv_ref
 
 
 def csr_to_bsr(rows: np.ndarray, cols: np.ndarray, val: np.ndarray,
-               ncols: int, bm: int = 8, bk: int = 128
+               ncols: int, bm: Optional[int] = None, bk: Optional[int] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int]:
     """Convert scalar CSR to BSR blocks of (bm, bk).
 
@@ -23,8 +24,16 @@ def csr_to_bsr(rows: np.ndarray, cols: np.ndarray, val: np.ndarray,
     vec_pad_to (KB*bk,), nrows_blocks).  Every block-row gets at least one
     (possibly zero) block so the kernel's output-initialization contract
     holds; blocks are emitted in (block_row, block_col) order.
+
+    ``bm``/``bk`` left ``None`` resolve via the tune cache — the block
+    shape is a conversion-time decoupling knob — falling back to (8, 128).
     """
     nrows = len(rows) - 1
+    if bm is None or bk is None:
+        knobs = tuned_knobs("dae_spmv", (nrows, ncols, len(val)), val.dtype,
+                            resolve_interpret(None), bm=(bm, 8),
+                            bk=(bk, 128))
+        bm, bk = knobs["bm"], knobs["bk"]
     nrb = cdiv(nrows, bm)
     nkb = cdiv(ncols, bk)
     blocks = {}

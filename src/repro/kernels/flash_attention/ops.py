@@ -8,7 +8,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import cdiv, resolve_interpret, round_up
+from repro.kernels.common import (cdiv, resolve_interpret, round_up,
+                                  tuned_knobs)
 from repro.kernels.flash_attention import kernel as _k
 from repro.kernels.flash_attention.ref import attention_ref, decode_ref
 
@@ -35,11 +36,21 @@ def _flash_impl(q, k, v, *, causal, window, bq, bk, interpret, method):
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
-                    bq: int = 128, bk: int = 128, method: str = "pallas",
+                    bq: Optional[int] = None, bk: Optional[int] = None,
+                    method: str = "pallas",
                     interpret: Optional[bool] = None) -> jax.Array:
-    """q (B,H,S,D); k,v (B,KVH,S,D) with H % KVH == 0 (GQA)."""
+    """q (B,H,S,D); k,v (B,KVH,S,D) with H % KVH == 0 (GQA).
+
+    ``bq``/``bk`` left ``None`` resolve via the tune cache (128 default).
+    """
+    interp = resolve_interpret(interpret)
+    if bq is None or bk is None:
+        knobs = tuned_knobs("flash_attention",
+                            (q.shape[2], k.shape[2], q.shape[3]), q.dtype,
+                            interp, bq=(bq, 128), bk=(bk, 128))
+        bq, bk = knobs["bq"], knobs["bk"]
     return _flash_impl(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
-                       interpret=resolve_interpret(interpret), method=method)
+                       interpret=interp, method=method)
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "interpret", "method"))

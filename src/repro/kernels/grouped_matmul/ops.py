@@ -8,7 +8,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import resolve_interpret, round_up
+from repro.kernels.common import resolve_interpret, round_up, tuned_knobs
 from repro.kernels.grouped_matmul import kernel as _k
 from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
 
@@ -32,16 +32,23 @@ def _gmm_impl(x, w, block_expert, *, bt, bf, bd, interpret, method):
 
 
 def grouped_matmul(x: jax.Array, w: jax.Array, block_expert: jax.Array, *,
-                   bt: int = 128, bf: int = 128, bd: int = 512,
-                   method: str = "pallas",
+                   bt: int = 128, bf: Optional[int] = None,
+                   bd: Optional[int] = None, method: str = "pallas",
                    interpret: Optional[bool] = None) -> jax.Array:
     """Expert-grouped GEMM: x (T, D) with tokens sorted by expert and
     padded so groups align to ``bt``; block_expert (T//bt,) is the expert
-    of each token block; w (E, D, F).  Returns (T, F)."""
+    of each token block; w (E, D, F).  Returns (T, F).
+
+    ``bf``/``bd`` left ``None`` resolve via the tune cache (128/512)."""
     t, d = x.shape
     if t % bt:
         raise ValueError(f"T={t} must be a multiple of bt={bt}")
+    interp = resolve_interpret(interpret)
+    if bf is None or bd is None:
+        knobs = tuned_knobs("grouped_matmul", (t, d, w.shape[2]), x.dtype,
+                            interp, bf=(bf, 128), bd=(bd, 512))
+        bf, bd = knobs["bf"], knobs["bd"]
     bd = min(bd, round_up(d, 128))
     bf = min(bf, round_up(w.shape[2], 128))
     return _gmm_impl(x, w, block_expert, bt=bt, bf=bf, bd=bd,
-                     interpret=resolve_interpret(interpret), method=method)
+                     interpret=interp, method=method)

@@ -1,0 +1,105 @@
+"""repro.tune — empirical autotuning of decoupling parameters.
+
+The paper picks requests-in-flight analytically (latency×bandwidth,
+§4.2) and channel capacities by profiling (§5.3/§5.4).  This subsystem
+keeps the analytic result (`repro.core.pipeline.plan_rif`) as the *seed*
+of a measured search:
+
+    space.py    discrete per-kernel / per-workload search spaces
+    search.py   deterministic grid / hill-climb searchers
+    runners.py  measurement backends (kernel wall-clock, simulator cycles)
+    cache.py    persistent JSON cache of winners
+
+Public API
+----------
+
+``tune_kernel(op)`` / ``tune_workload(bench, cfg)`` run a search and
+persist the winner; ``dispatch_config(op, dims, dtype, interpret)`` is
+the cheap cache-only lookup the kernel dispatchers in
+``src/repro/kernels/*/ops.py`` call on every invocation — a hit returns
+the tuned config, a miss returns ``{}`` and the dispatcher falls back to
+the ``plan_rif`` analytic default.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.tune.cache import (CacheEntry, TuneCache, cache_path,
+                              default_cache, make_key, reset_default_cache)
+from repro.tune.runners import (KERNEL_DIMS, backend_tag, kernel_runner,
+                                workload_runner)
+from repro.tune.search import TuneResult, search
+from repro.tune.space import (Config, SearchSpace, kernel_space,
+                              workload_space)
+
+__all__ = [
+    "CacheEntry", "TuneCache", "TuneResult", "SearchSpace", "Config",
+    "cache_path", "default_cache", "reset_default_cache", "make_key",
+    "kernel_space", "workload_space", "kernel_runner", "workload_runner",
+    "KERNEL_DIMS", "tune_kernel", "tune_workload", "dispatch_config",
+]
+
+
+def tune_kernel(op: str, dims: Optional[Tuple[int, ...]] = None, *,
+                interpret: Optional[bool] = None, reps: int = 2,
+                max_evals: int = 24, strategy: str = "auto",
+                cache: Optional[TuneCache] = None,
+                force: bool = False) -> TuneResult:
+    """Tune kernel ``op`` at ``dims`` by wall-clock and persist the winner.
+
+    A prior winner in the cache short-circuits the search (returned as a
+    zero-eval :class:`TuneResult`) unless ``force``.
+    """
+    cache = cache or default_cache()
+    measure, key, dims = kernel_runner(op, dims, interpret=interpret,
+                                       reps=reps)
+    if not force:
+        hit = cache.get(key)
+        if hit is not None:
+            return TuneResult(op, dict(hit.config), hit.score,
+                              dict(hit.config), hit.baseline_score
+                              or hit.score, 0, [])
+    space = kernel_space(op, *dims)
+    res = search(space, measure, max_evals=max_evals, strategy=strategy)
+    cache.put(key, CacheEntry(config=res.best, score=res.best_score,
+                              baseline_score=res.seed_score,
+                              evals=res.evals, note="wallclock"))
+    return res
+
+
+def tune_workload(benchmark: str, config: str = "rhls_dec", *,
+                  scale: str = "small", mem: str = "fixed",
+                  latency: int = 100, max_evals: int = 32,
+                  strategy: str = "auto",
+                  cache: Optional[TuneCache] = None,
+                  force: bool = False) -> TuneResult:
+    """Tune (rif, cap_slack) for a simulated DAE workload by cycle count."""
+    cache = cache or default_cache()
+    measure, key = workload_runner(benchmark, config, scale=scale, mem=mem,
+                                   latency=latency)
+    if not force:
+        hit = cache.get(key)
+        if hit is not None:
+            return TuneResult(f"workload:{benchmark}", dict(hit.config),
+                              hit.score, dict(hit.config),
+                              hit.baseline_score or hit.score, 0, [])
+    space = workload_space(benchmark, latency=latency)
+    res = search(space, measure, max_evals=max_evals, strategy=strategy)
+    cache.put(key, CacheEntry(config=res.best, score=res.best_score,
+                              baseline_score=res.seed_score,
+                              evals=res.evals,
+                              note=f"sim:{mem}:lat={latency}"))
+    return res
+
+
+def dispatch_config(op: str, dims: Tuple[int, ...], dtype, interpret: bool,
+                    mem: str = "wallclock") -> Config:
+    """Cache-only lookup for a kernel dispatcher — never raises, never
+    searches; ``{}`` on a miss (callers fall back to ``plan_rif``)."""
+    try:
+        key = make_key(op, dims, str(dtype), backend_tag(interpret), mem)
+        hit = default_cache().get(key)
+        return dict(hit.config) if hit is not None else {}
+    except Exception:
+        return {}

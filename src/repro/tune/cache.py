@@ -1,0 +1,153 @@
+"""Persistent JSON cache of tuned decoupling configurations.
+
+Winners are keyed by ``(op, shape, dtype, backend, memory model)`` so a
+config tuned for one problem size / memory system never leaks into
+another.  The cache is a single JSON file (atomic replace on save) whose
+location is, in order of precedence:
+
+  1. ``$REPRO_TUNE_CACHE`` (explicit path),
+  2. ``$XDG_CACHE_HOME/repro/tune_cache.json``,
+  3. ``~/.cache/repro/tune_cache.json``.
+
+Dispatchers consult the process-wide :func:`default_cache` singleton;
+lookups after the first are dictionary gets, so consulting the tuner on
+every kernel call is free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+Config = Dict[str, Any]
+
+__all__ = ["TuneCache", "CacheEntry", "make_key", "default_cache",
+           "cache_path", "reset_default_cache"]
+
+_SCHEMA_VERSION = 1
+
+
+def cache_path() -> Path:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return Path(env).expanduser()
+    xdg = os.environ.get("XDG_CACHE_HOME")
+    base = Path(xdg).expanduser() if xdg else Path.home() / ".cache"
+    return base / "repro" / "tune_cache.json"
+
+
+def make_key(op: str, shape: Sequence[int] | Tuple[int, ...], dtype: str,
+             backend: str, mem: str) -> str:
+    """Canonical cache key.  ``mem`` names the measurement model, e.g.
+    ``wallclock``, ``sim:fixed:lat=100`` or ``sim:moms:lat=100``."""
+    shape_s = "x".join(str(int(s)) for s in shape) or "scalar"
+    return "|".join((op, shape_s, str(dtype), backend, mem))
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    config: Config
+    score: float                  # lower is better (seconds or cycles)
+    baseline_score: Optional[float] = None   # seed (plan_rif) config score
+    evals: int = 0
+    note: str = ""
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "CacheEntry":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+class TuneCache:
+    """Load-once, save-atomically JSON store of :class:`CacheEntry`."""
+
+    def __init__(self, path: Optional[Path | str] = None):
+        self.path = Path(path) if path is not None else cache_path()
+        self._entries: Optional[Dict[str, CacheEntry]] = None
+        self.hits = 0
+        self.misses = 0
+
+    # -- loading / saving ---------------------------------------------------
+
+    def _load(self) -> Dict[str, CacheEntry]:
+        if self._entries is not None:
+            return self._entries
+        entries: Dict[str, CacheEntry] = {}
+        try:
+            raw = json.loads(self.path.read_text())
+            if raw.get("version") == _SCHEMA_VERSION:
+                for k, v in raw.get("entries", {}).items():
+                    entries[k] = CacheEntry.from_json(v)
+        except (OSError, ValueError, TypeError):
+            pass  # missing or corrupt cache == empty cache
+        self._entries = entries
+        return entries
+
+    def save(self) -> Path:
+        entries = self._load()
+        payload = {
+            "version": _SCHEMA_VERSION,
+            "entries": {k: e.to_json() for k, e in sorted(entries.items())},
+        }
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return self.path
+
+    # -- access -------------------------------------------------------------
+
+    def get(self, key: str) -> Optional[CacheEntry]:
+        e = self._load().get(key)
+        if e is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return e
+
+    def put(self, key: str, entry: CacheEntry, save: bool = True) -> None:
+        self._load()[key] = entry
+        if save:
+            self.save()
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._load()
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def keys(self):
+        return self._load().keys()
+
+
+_DEFAULT: Optional[TuneCache] = None
+
+
+def default_cache() -> TuneCache:
+    """Process-wide cache singleton (honours ``$REPRO_TUNE_CACHE``)."""
+    global _DEFAULT
+    if _DEFAULT is None or _DEFAULT.path != cache_path():
+        _DEFAULT = TuneCache()
+    return _DEFAULT
+
+
+def reset_default_cache() -> None:
+    """Drop the singleton (tests; or after changing the env var)."""
+    global _DEFAULT
+    _DEFAULT = None

@@ -1,0 +1,235 @@
+"""Measurement backends for the tuner.
+
+Two backends, matching the two halves of the repo:
+
+* **wallclock** — time the public Pallas/ref kernel wrappers
+  (``src/repro/kernels/*/ops.py``).  On CPU this runs interpret mode, so
+  absolute numbers are plumbing overhead, but the *relative* ordering of
+  block shapes and ring depths is what the tuner needs; on a real TPU the
+  same runner measures the compiled kernels.
+* **simulator** — cycle counts from :mod:`repro.core.simulator` for the
+  paper's DAE programs in :mod:`repro.core.workloads`.  Deterministic,
+  fast, and it surfaces the §5.3 deadlocks (propagated to the searcher,
+  which maps them to an infinite score).
+
+Every runner returns ``(measure, key)``: a ``measure(config) -> score``
+callable (lower is better) plus the canonical cache key for persisting
+the winner.  Input data is built once per runner from a fixed seed, so a
+tuning run is deterministic end to end.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.tune.cache import make_key
+from repro.tune.space import Config
+
+__all__ = ["kernel_runner", "workload_runner", "KERNEL_DIMS",
+           "backend_tag", "time_callable"]
+
+# default problem dimensions per op: modest sizes so a CPU interpret-mode
+# tuning sweep finishes in seconds, big enough that block shape matters
+KERNEL_DIMS: Dict[str, Tuple[int, ...]] = {
+    "dae_gather": (2048, 256, 512),          # (n, d, m)
+    "dae_merge": (2048, 2048),               # (n, m)
+    "flash_attention": (256, 256, 64),       # (sq, sk, d_head)
+    "grouped_matmul": (256, 256, 256),       # (t, d, f)
+    "batched_searchsorted": (4096, 256),     # (n, m)
+    "dae_spmv": (256, 4096, 4096),           # (nrows, ncols, nnz)
+}
+
+
+def backend_tag(interpret: bool) -> str:
+    import jax
+    return "interpret" if interpret else jax.default_backend()
+
+
+def time_callable(fn: Callable[[], object], reps: int = 3) -> float:
+    """Best-of-``reps`` wall time in seconds (first call compiles)."""
+    import jax
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock kernel runners
+# ---------------------------------------------------------------------------
+
+
+def _gather_measure(dims, interpret, reps):
+    import jax.numpy as jnp
+    from repro.kernels.dae_gather import dae_gather
+    n, d, m = dims
+    r = np.random.default_rng(0)
+    table = jnp.asarray(r.standard_normal((n, d)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, n, m), jnp.int32)
+
+    def measure(cfg: Config) -> float:
+        # every knob explicit so the dispatcher never consults the cache
+        # mid-measurement (a stale entry must not contaminate the search)
+        kw = {"method": cfg.get("method", "pipelined"),
+              "block_d": cfg.get("block_d", 512),
+              "chunk": cfg.get("chunk", 64),
+              "rif": cfg.get("rif", 8),
+              "interpret": interpret}
+        return time_callable(lambda: dae_gather(table, idx, **kw), reps)
+
+    return measure, (n, d, m), "float32"
+
+
+def _merge_measure(dims, interpret, reps):
+    import jax.numpy as jnp
+    from repro.kernels.dae_merge import merge_sorted
+    n, m = dims
+    r = np.random.default_rng(0)
+    a = jnp.sort(jnp.asarray(r.standard_normal(n), jnp.float32))
+    b = jnp.sort(jnp.asarray(r.standard_normal(m), jnp.float32))
+
+    def measure(cfg: Config) -> float:
+        return time_callable(
+            lambda: merge_sorted(a, b, tile=cfg["tile"], interpret=interpret),
+            reps)
+
+    return measure, (n, m), "float32"
+
+
+def _flash_measure(dims, interpret, reps):
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention
+    sq, sk, d = dims
+    r = np.random.default_rng(0)
+    q = jnp.asarray(r.standard_normal((1, 4, sq, d)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 2, sk, d)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, 2, sk, d)), jnp.float32)
+
+    def measure(cfg: Config) -> float:
+        return time_callable(
+            lambda: flash_attention(q, k, v, bq=cfg["bq"], bk=cfg["bk"],
+                                    interpret=interpret), reps)
+
+    return measure, (sq, sk, d), "float32"
+
+
+def _gmm_measure(dims, interpret, reps):
+    import jax.numpy as jnp
+    from repro.kernels.grouped_matmul import grouped_matmul
+    t, d, f = dims
+    e, bt = 4, 128
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.standard_normal((t, d)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((e, d, f)), jnp.float32)
+    blk = jnp.asarray(r.integers(0, e, t // bt), jnp.int32)
+
+    def measure(cfg: Config) -> float:
+        return time_callable(
+            lambda: grouped_matmul(x, w, blk, bt=bt, bf=cfg["bf"],
+                                   bd=cfg["bd"], interpret=interpret), reps)
+
+    return measure, (t, d, f), "float32"
+
+
+def _searchsorted_measure(dims, interpret, reps):
+    import jax.numpy as jnp
+    from repro.kernels.dae_chase import batched_searchsorted
+    n, m = dims
+    r = np.random.default_rng(0)
+    table = jnp.sort(jnp.asarray(r.integers(0, 1 << 30, n), jnp.int32))
+    keys = jnp.asarray(r.integers(0, 1 << 30, m), jnp.int32)
+
+    def measure(cfg: Config) -> float:
+        return time_callable(
+            lambda: batched_searchsorted(table, keys, block=cfg["block"],
+                                         interpret=interpret), reps)
+
+    return measure, (n, m), "int32"
+
+
+def _spmv_measure(dims, interpret, reps):
+    import jax.numpy as jnp
+    from repro.kernels.dae_spmv import csr_to_bsr, dae_spmv
+    nrows, ncols, nnz = dims
+    r = np.random.default_rng(0)
+    counts = r.multinomial(nnz, np.ones(nrows) / nrows)
+    rows = np.zeros(nrows + 1, np.int64)
+    rows[1:] = np.cumsum(counts)
+    cols = r.integers(0, ncols, nnz)
+    val = r.standard_normal(nnz).astype(np.float32)
+    vec = jnp.asarray(r.standard_normal(ncols), jnp.float32)
+
+    def measure(cfg: Config) -> float:
+        # block shape is a conversion-time knob: conversion cost is NOT
+        # timed (amortized over many matvecs), the matvec is
+        vb, ri, ci, _, nrb = csr_to_bsr(rows, cols, val, ncols,
+                                        bm=cfg["bm"], bk=cfg["bk"])
+        vbj, rij, cij = jnp.asarray(vb), jnp.asarray(ri), jnp.asarray(ci)
+        return time_callable(
+            lambda: dae_spmv(vbj, rij, cij, vec, nrb, interpret=interpret),
+            reps)
+
+    return measure, (nrows, ncols, nnz), "float32"
+
+
+_KERNEL_MEASURES = {
+    "dae_gather": _gather_measure,
+    "dae_merge": _merge_measure,
+    "flash_attention": _flash_measure,
+    "grouped_matmul": _gmm_measure,
+    "batched_searchsorted": _searchsorted_measure,
+    "dae_spmv": _spmv_measure,
+}
+
+
+def kernel_runner(op: str, dims: Optional[Tuple[int, ...]] = None, *,
+                  interpret: Optional[bool] = None, reps: int = 2):
+    """Wall-clock measurement for kernel ``op``.
+
+    Returns ``(measure, key, dims)`` where ``key`` is the cache key the
+    winner should be stored under.
+    """
+    from repro.kernels.common import resolve_interpret
+    if op not in _KERNEL_MEASURES:
+        raise KeyError(f"no kernel runner for {op!r}")
+    dims = tuple(dims or KERNEL_DIMS[op])
+    interp = resolve_interpret(interpret)
+    measure, shape, dtype = _KERNEL_MEASURES[op](dims, interp, reps)
+    key = make_key(op, shape, dtype, backend_tag(interp), "wallclock")
+    return measure, key, dims
+
+
+# ---------------------------------------------------------------------------
+# Simulator-backed workload runner
+# ---------------------------------------------------------------------------
+
+
+def workload_runner(benchmark: str, config: str = "rhls_dec", *,
+                    scale: str = "small", mem: str = "fixed",
+                    latency: int = 100):
+    """Cycle-count measurement of one (benchmark, config) simulator cell.
+
+    ``measure`` returns simulated cycles; an incorrect result is scored
+    ``inf`` and simulator deadlocks propagate (the searcher penalizes
+    them), so capacity settings that violate §5.3 are rejected, not
+    crashed on.
+    """
+    from repro.core.workloads import run_workload
+
+    def measure(cfg: Config) -> float:
+        rep = run_workload(benchmark, config, scale=scale, mem=mem,
+                           latency=latency, rif=cfg["rif"],
+                           cap_slack=cfg.get("cap_slack"))
+        if not rep.correct:
+            return float("inf")
+        return float(rep.cycles)
+
+    key = make_key(f"workload:{benchmark}:{config}", (), "int",
+                   "sim", f"sim:{mem}:lat={latency}:scale={scale}")
+    return measure, key

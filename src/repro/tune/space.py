@@ -1,0 +1,203 @@
+"""Search spaces for the decoupling parameters (paper §4.2, §5.3/§5.4).
+
+A :class:`SearchSpace` is an ordered mapping from parameter name to the
+discrete values the tuner may try.  Every space ships with a *seed
+configuration* derived from the analytic planner (`plan_rif`), so the
+empirical search starts from the paper's latency×bandwidth heuristic and
+only has to correct it, not rediscover it.
+
+Spaces are deliberately small (tens to a few hundred points): the
+measurement backends (wall-clock on interpret-mode Pallas, cycle counts
+from the DAE simulator) cost milliseconds-to-seconds per point, and the
+hill-climber visits only a local neighbourhood of the seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Iterator, Mapping, Tuple
+
+from repro.core.pipeline import plan_rif
+
+Config = Dict[str, Any]
+
+__all__ = ["SearchSpace", "Config", "kernel_space", "workload_space",
+           "KERNEL_SPACES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Ordered discrete search space with a seed point.
+
+    ``params`` maps name -> tuple of allowed values (each tuple sorted in
+    the natural "increasing resource" order so the hill-climber's ±1-step
+    neighbourhood is meaningful).  ``seed`` must use only listed values —
+    :meth:`snap` projects an arbitrary config onto the grid.
+    """
+
+    name: str
+    params: Mapping[str, Tuple[Any, ...]]
+    seed: Config
+
+    def __post_init__(self) -> None:
+        for k, vs in self.params.items():
+            if not vs:
+                raise ValueError(f"space {self.name}: param {k!r} is empty")
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for vs in self.params.values():
+            n *= len(vs)
+        return n
+
+    def snap(self, cfg: Config) -> Config:
+        """Project ``cfg`` onto the grid (nearest listed value per param;
+        unknown params dropped, missing params filled from the seed)."""
+        out: Config = {}
+        for k, vs in self.params.items():
+            want = cfg.get(k, self.seed.get(k, vs[0]))
+            if want in vs:
+                out[k] = want
+            elif all(isinstance(v, (int, float)) for v in vs) and isinstance(
+                    want, (int, float)):
+                out[k] = min(vs, key=lambda v: abs(v - want))
+            else:
+                out[k] = vs[0]
+        return out
+
+    def neighbours(self, cfg: Config) -> Iterator[Config]:
+        """±1 grid step along each axis (the hill-climb neighbourhood)."""
+        for k, vs in self.params.items():
+            i = vs.index(cfg[k])
+            for j in (i - 1, i + 1):
+                if 0 <= j < len(vs):
+                    yield {**cfg, k: vs[j]}
+
+    def grid(self) -> Iterator[Config]:
+        keys = list(self.params)
+        for combo in itertools.product(*(self.params[k] for k in keys)):
+            yield dict(zip(keys, combo))
+
+
+# ---------------------------------------------------------------------------
+# Kernel spaces (wall-clock backend)
+# ---------------------------------------------------------------------------
+
+
+def _pow2_range(lo: int, hi: int) -> Tuple[int, ...]:
+    out = []
+    v = lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return tuple(out)
+
+
+def _snapped(sp: SearchSpace) -> SearchSpace:
+    return dataclasses.replace(sp, seed=sp.snap(sp.seed))
+
+
+def _gather_space(n: int, d: int, m: int, itemsize: int = 4) -> SearchSpace:
+    """Decoupled gather: dispatch method plus the RIF-ring knobs.
+
+    ``method`` is part of the space — 'pipelined' (scalar-prefetch
+    BlockSpec, RIF = pipeline double-buffering) vs 'rif' (explicit
+    multi-buffer DMA ring).  ``chunk``/``rif`` only act under 'rif' and
+    ``block_d`` only under 'pipelined'; the space is small enough that
+    the redundant cross-terms cost a handful of evals.
+    """
+    chunks = tuple(c for c in _pow2_range(16, 256) if c <= max(16, m))
+    rifs = _pow2_range(2, 64)
+    block_ds = tuple(b for b in (128, 256, 512, 1024) if b <= max(128, d))
+    chunk0 = chunks[min(len(chunks) - 1, 2)]
+    # analytic seed: one chunk of rows is the DMA block of the ring
+    plan = plan_rif(chunk0 * max(d, 1) * itemsize)
+    seed = {"method": "pipelined", "chunk": chunk0,
+            "rif": min(plan.rif, chunk0), "block_d": 512}
+    return _snapped(SearchSpace("dae_gather", {
+        "method": ("pipelined", "rif"),
+        "chunk": chunks,
+        "rif": rifs,
+        "block_d": block_ds,
+    }, seed))
+
+
+def _merge_space(n: int, m: int) -> SearchSpace:
+    tiles = tuple(t for t in _pow2_range(64, 1024) if t <= max(64, n + m))
+    return _snapped(SearchSpace("dae_merge", {"tile": tiles}, {"tile": 256}))
+
+
+def _flash_space(sq: int, sk: int, d: int) -> SearchSpace:
+    bqs = tuple(b for b in (128, 256, 512) if b <= max(128, sq))
+    bks = tuple(b for b in (128, 256, 512) if b <= max(128, sk))
+    return _snapped(SearchSpace("flash_attention", {"bq": bqs, "bk": bks},
+                                {"bq": 128, "bk": 128}))
+
+
+def _gmm_space(t: int, d: int, f: int) -> SearchSpace:
+    bfs = tuple(b for b in (128, 256, 512) if b <= max(128, f))
+    bds = tuple(b for b in (128, 256, 512, 1024) if b <= max(128, d))
+    return _snapped(SearchSpace("grouped_matmul", {"bf": bfs, "bd": bds},
+                                {"bf": 128, "bd": 512}))
+
+
+def _searchsorted_space(n: int, m: int) -> SearchSpace:
+    blocks = tuple(b for b in (64, 128, 256, 512) if b <= max(64, n))
+    return _snapped(SearchSpace("batched_searchsorted", {"block": blocks},
+                                {"block": 128}))
+
+
+def _spmv_space(nrows: int, ncols: int, nnz: int) -> SearchSpace:
+    """BSR block shape (conversion-time knob consulted by csr_to_bsr)."""
+    return _snapped(SearchSpace("dae_spmv", {
+        "bm": (8, 16, 32),
+        "bk": (128, 256),
+    }, {"bm": 8, "bk": 128}))
+
+
+KERNEL_SPACES = {
+    "dae_gather": _gather_space,
+    "dae_merge": _merge_space,
+    "flash_attention": _flash_space,
+    "grouped_matmul": _gmm_space,
+    "batched_searchsorted": _searchsorted_space,
+    "dae_spmv": _spmv_space,
+}
+
+
+def kernel_space(op: str, *dims: int) -> SearchSpace:
+    """Search space for kernel ``op`` at the given problem dimensions."""
+    try:
+        builder = KERNEL_SPACES[op]
+    except KeyError:
+        raise KeyError(f"no search space registered for kernel {op!r}")
+    return builder(*dims)
+
+
+# ---------------------------------------------------------------------------
+# Workload (simulator backend) space
+# ---------------------------------------------------------------------------
+
+
+def workload_space(benchmark: str, latency: int = 100,
+                   word_bytes: int = 8) -> SearchSpace:
+    """RIF × channel-capacity-slack space for a simulated DAE workload.
+
+    ``cap_slack`` is the channel capacity headroom over the ring depth:
+    load/stream channels get ``capacity = rif + cap_slack``.  Negative
+    slack (capacity below the ring depth) is the §5.3 danger zone — a
+    round-robin chase deadlocks there, which the searcher maps to an
+    infinite score via the deadlock penalty; large slack burns buffer
+    resources for no speedup (§5.4).
+    """
+    rifs = _pow2_range(2, 256)
+    slacks = (-4, 0, 1, 4, 16, 64)
+    # seed: cover `latency` cycles of 1-word/cycle issue (§4.2): feed the
+    # planner a 1-second-per-cycle latency and 1-word-per-second bandwidth
+    plan = plan_rif(word_bytes, latency_s=float(latency),
+                    bandwidth=float(word_bytes), max_rif=rifs[-1])
+    seed = {"rif": plan.rif, "cap_slack": 1}
+    return _snapped(SearchSpace(f"workload:{benchmark}",
+                                {"rif": rifs, "cap_slack": slacks}, seed))

@@ -10,12 +10,31 @@ if SRC not in sys.path:
 # 512 via its own first lines); make sure nothing leaks in.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings, HealthCheck  # noqa: E402
+import pytest  # noqa: E402
 
-settings.register_profile(
-    "repro",
-    max_examples=25,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("repro")
+
+@pytest.fixture(autouse=True)
+def _isolated_tune_cache(tmp_path, monkeypatch):
+    """Kernel dispatchers consult the persistent tune cache on None
+    knobs; point it at a per-test temp file so a developer's
+    ~/.cache/repro/tune_cache.json never changes what the tests run."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune_cache.json"))
+    from repro.tune import reset_default_cache
+    reset_default_cache()
+    yield
+    reset_default_cache()
+
+
+try:
+    from hypothesis import settings, HealthCheck  # noqa: E402
+except ImportError:  # property tests skip cleanly without hypothesis
+    settings = None
+else:
+    settings.register_profile(
+        "repro",
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large],
+    )
+    settings.load_profile("repro")

@@ -1,0 +1,123 @@
+"""DaeProgram.validate_channels: functional dry-run channel discovery."""
+
+import pytest
+
+from repro.core.dae import (ConservationError, DaeProgram, Deq, Enq,
+                            LoadChannel, Process, Req, Resp, Store,
+                            StreamChannel)
+
+
+def _pipeline(load, stream, n):
+    def producer():
+        for i in range(n):
+            yield Req(load, i)
+            v = yield Resp(load)
+            yield Enq(stream, v)
+
+    def consumer():
+        for i in range(n):
+            v = yield Deq(stream)
+            yield Store("out", i, v)
+
+    return [Process("prod", producer()), Process("cons", consumer())]
+
+
+def test_validate_collects_channels():
+    load = LoadChannel("ld", capacity=4, port="mem")
+    stream = StreamChannel("st", capacity=2)
+    prog = DaeProgram("ok", _pipeline(load, stream, 3))
+    seen = prog.validate_channels({"mem": [10, 20, 30]})
+    assert set(seen) == {"ld", "st"}
+    assert seen["ld"] is load and seen["st"] is stream
+
+
+def test_validate_rejects_conflicting_capacity():
+    a = LoadChannel("dup", capacity=4, port="mem")
+    b = LoadChannel("dup", capacity=8, port="mem")
+
+    def gen():
+        yield Req(a, 0)
+        yield Resp(a)
+        yield Req(b, 0)
+        yield Resp(b)
+
+    prog = DaeProgram("bad", [Process("p", gen())])
+    with pytest.raises(ValueError, match="dup"):
+        prog.validate_channels({"mem": [1]})
+
+
+def test_validate_rejects_conflicting_type():
+    a = StreamChannel("x", capacity=4)
+    b = LoadChannel("x", capacity=4, port="mem")
+
+    def gen():
+        yield Enq(a, 1)
+        yield Deq(a)
+        yield Req(b, 0)
+        yield Resp(b)
+
+    with pytest.raises(ValueError, match="x"):
+        DaeProgram("bad", [Process("p", gen())]).validate_channels({"mem": [1]})
+
+
+def test_validate_same_object_or_equal_decl_ok():
+    # two *equal* declarations (same type+capacity) are fine
+    a = LoadChannel("same", capacity=4, port="mem")
+    b = LoadChannel("same", capacity=4, port="mem")
+
+    def gen():
+        yield Req(a, 0)
+        yield Resp(a)
+        yield Req(b, 0)
+        yield Resp(b)
+
+    seen = DaeProgram("ok", [Process("p", gen())]).validate_channels(
+        {"mem": [7]})
+    assert set(seen) == {"same"}
+
+
+def test_validate_detects_stall():
+    st = StreamChannel("never", capacity=1)
+
+    def gen():
+        yield Deq(st)
+
+    with pytest.raises(ConservationError, match="stalled"):
+        DaeProgram("stall", [Process("p", gen())]).validate_channels()
+
+
+def test_validate_detects_undrained():
+    st = StreamChannel("left", capacity=4)
+
+    def gen():
+        yield Enq(st, 1)
+
+    with pytest.raises(ConservationError, match="undrained"):
+        DaeProgram("left", [Process("p", gen())]).validate_channels()
+
+
+def test_validate_rejects_blocking_fused_followup():
+    from repro.core.simulator import Fused
+    ld = LoadChannel("ld", capacity=2, port="mem")
+    st = StreamChannel("st", capacity=2)
+
+    def gen():
+        yield Req(ld, 0)
+        # the follow-up Deq blocks (st never enqueued): contract violation
+        yield Fused(Resp(ld), lambda v: Deq(st))
+
+    with pytest.raises(ConservationError, match="non-blocking"):
+        DaeProgram("bad-fused", [Process("p", gen())]).validate_channels(
+            {"mem": [1]})
+
+
+def test_validate_real_workload_program():
+    # a freshly built paper benchmark program validates cleanly
+    from repro.core.workloads import (_hashtable_phases, _mem_factory_for,
+                                      make_hashtable_data)
+    data = make_hashtable_data("small")
+    mf = _mem_factory_for("fixed", 1, None, ())
+    progs, mems, _, _ = _hashtable_phases(data, "rhls_dec", 1, 8, mf)
+    seen = progs[0].validate_channels({p: m.data for p, m in mems.items()})
+    assert set(seen) == {"ht_load", "ht_state"}
+    assert seen["ht_load"].capacity == 9  # rif + 1

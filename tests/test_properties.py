@@ -2,7 +2,11 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' extra")
+from hypothesis import given, strategies as st  # noqa: E402
 
 from repro.core.dae import (ConservationError, DaeProgram, Deq, Enq,
                             LoadChannel, Process, Req, Resp, StreamChannel)

@@ -1,0 +1,241 @@
+"""repro.tune: spaces, searchers, cache round-trip, plan_rif edges,
+and the kernel dispatchers' cache consultation."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import VMEM_BUDGET_FRACTION, plan_rif
+from repro.kernels.common import VMEM_BYTES
+from repro.tune import (CacheEntry, TuneCache, cache_path, default_cache,
+                        dispatch_config, kernel_space, make_key,
+                        reset_default_cache, tune_workload, workload_space)
+from repro.tune.search import hill_climb, search
+from repro.tune.space import SearchSpace
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "tune_cache.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
+    reset_default_cache()
+    yield path
+    reset_default_cache()
+
+
+# -- plan_rif edge cases ------------------------------------------------------
+
+
+def test_plan_rif_block_larger_than_vmem_budget():
+    budget = int(VMEM_BYTES * VMEM_BUDGET_FRACTION)
+    plan = plan_rif(budget * 2)
+    # can't even double-buffer: clamped to the min_rif floor
+    assert plan.rif == 2
+    assert plan.inflight_bytes == 2 * budget * 2
+
+
+def test_plan_rif_zero_size_block_clamps_to_max():
+    plan = plan_rif(0, max_rif=64)
+    assert plan.rif == 64
+    assert plan.inflight_bytes == 0
+
+
+def test_plan_rif_min_max_clamping():
+    # huge blocks -> latency needs almost nothing -> min_rif floor
+    lo = plan_rif(1 << 24, min_rif=3)
+    assert lo.rif >= 3
+    # tiny blocks -> latency wants thousands -> max_rif ceiling
+    hi = plan_rif(64, max_rif=17)
+    assert hi.rif == 17
+    assert hi.note == "clamped"
+    # the latency-bound middle: rif covers latency x bandwidth
+    mid = plan_rif(1 << 20, latency_s=2e-6, bandwidth=819e9)
+    assert mid.rif * mid.block_bytes >= 2e-6 * 819e9
+    assert mid.note == "latency-bound"
+
+
+def test_plan_rif_respects_explicit_vmem_budget():
+    plan = plan_rif(1024, vmem_budget=4096, max_rif=1 << 20)
+    assert plan.rif <= 4
+    assert plan.vmem_fraction <= 1.0
+
+
+# -- cache round-trip ---------------------------------------------------------
+
+
+def test_cache_roundtrip_identical_config(tmp_cache):
+    key = make_key("dae_gather", (4096, 256, 512), "float32", "interpret",
+                   "wallclock")
+    cfg = {"method": "rif", "chunk": 32, "rif": 16, "block_d": 256}
+    TuneCache(tmp_cache).put(key, CacheEntry(config=cfg, score=1.5e-3,
+                                             baseline_score=2.0e-3, evals=9))
+    fresh = TuneCache(tmp_cache)  # separate instance -> reads from disk
+    hit = fresh.get(key)
+    assert hit is not None and hit.config == cfg
+    assert hit.score == 1.5e-3 and hit.baseline_score == 2.0e-3
+    assert fresh.hits == 1 and fresh.misses == 0
+    assert fresh.get("nope|1|f32|cpu|wallclock") is None
+    assert fresh.misses == 1
+
+
+def test_cache_survives_corrupt_file(tmp_cache):
+    tmp_cache.write_text("{not json")
+    c = TuneCache(tmp_cache)
+    assert len(c) == 0  # corrupt == empty, never raises
+    c.put("k", CacheEntry(config={"a": 1}, score=1.0))
+    assert TuneCache(tmp_cache).get("k").config == {"a": 1}
+
+
+def test_cache_path_honours_env(tmp_cache):
+    assert cache_path() == tmp_cache
+    assert default_cache().path == tmp_cache
+
+
+# -- spaces -------------------------------------------------------------------
+
+
+def test_space_snap_and_neighbours():
+    sp = SearchSpace("t", {"rif": (2, 4, 8, 16), "tile": (128, 256)},
+                     {"rif": 4, "tile": 128})
+    assert sp.size == 8
+    assert sp.snap({"rif": 5, "tile": 9999, "junk": 1}) == \
+        {"rif": 4, "tile": 256}
+    ns = list(sp.neighbours({"rif": 4, "tile": 128}))
+    assert {"rif": 2, "tile": 128} in ns and {"rif": 8, "tile": 128} in ns
+    assert {"rif": 4, "tile": 256} in ns and len(ns) == 3
+
+
+def test_kernel_space_seed_on_grid():
+    for op, dims in (("dae_gather", (2048, 256, 512)),
+                     ("dae_merge", (2048, 2048)),
+                     ("flash_attention", (256, 256, 64)),
+                     ("dae_spmv", (256, 4096, 4096))):
+        sp = kernel_space(op, *dims)
+        for k, v in sp.seed.items():
+            assert v in sp.params[k], (op, k, v)
+
+
+def test_workload_space_seed_covers_latency():
+    sp = workload_space("hashtable", latency=100)
+    assert sp.seed["rif"] >= 100  # §4.2: RIF >= memory latency in cycles
+    assert sp.seed["cap_slack"] >= 1  # legacy-safe, deadlock-free seed
+
+
+# -- searchers ----------------------------------------------------------------
+
+
+def _quadratic(cfg):
+    return (cfg["x"] - 6) ** 2 + (cfg["y"] - 3) ** 2
+
+
+def test_search_grid_finds_optimum():
+    sp = SearchSpace("q", {"x": tuple(range(10)), "y": tuple(range(5))},
+                     {"x": 0, "y": 0})
+    res = search(sp, _quadratic, max_evals=sp.size, strategy="grid")
+    assert res.best == {"x": 6, "y": 3} and res.best_score == 0
+
+
+def test_hill_climb_descends_from_seed():
+    sp = SearchSpace("q", {"x": tuple(range(10)), "y": tuple(range(5))},
+                     {"x": 2, "y": 1})
+    res = hill_climb(sp, _quadratic, max_evals=40)
+    assert res.best == {"x": 6, "y": 3}
+    assert res.seed_score == _quadratic({"x": 2, "y": 1})
+    assert res.improvement == math.inf  # best_score hit exact 0
+
+
+def test_search_deterministic():
+    sp = SearchSpace("q", {"x": tuple(range(10)), "y": tuple(range(5))},
+                     {"x": 2, "y": 1})
+    a = hill_climb(sp, _quadratic, max_evals=30)
+    b = hill_climb(sp, _quadratic, max_evals=30)
+    assert a.best == b.best and a.trace == b.trace
+
+
+def test_search_penalizes_deadlock():
+    from repro.core.simulator import DeadlockError
+    sp = SearchSpace("d", {"x": (0, 1, 2, 3)}, {"x": 1})
+
+    def measure(cfg):
+        if cfg["x"] < 2:
+            raise DeadlockError("undersized capacity")
+        return float(cfg["x"])
+
+    res = search(sp, measure, max_evals=16, strategy="grid")
+    assert res.best == {"x": 2} and res.best_score == 2.0
+    assert not math.isfinite(res.seed_score)
+
+
+# -- workload tuning + cache short-circuit ------------------------------------
+
+
+def test_tune_workload_end_to_end(tmp_cache):
+    res = tune_workload("hashtable", "rhls_dec", scale="small", latency=20,
+                        max_evals=8)
+    assert res.evals > 0 and math.isfinite(res.best_score)
+    assert res.best_score <= res.seed_score
+    assert tmp_cache.exists()
+    again = tune_workload("hashtable", "rhls_dec", scale="small", latency=20,
+                          max_evals=8)
+    assert again.evals == 0  # cache hit: no re-measurement
+    assert again.best == res.best and again.best_score == res.best_score
+
+
+def test_cap_slack_reproduces_deadlock():
+    from repro.core.simulator import DeadlockError
+    from repro.core.workloads import run_workload
+    with pytest.raises(DeadlockError):
+        run_workload("hashtable", "rhls_dec", scale="small", latency=20,
+                     rif=8, cap_slack=-4)
+    # legacy sizing (cap_slack=1) matches the no-override default
+    a = run_workload("hashtable", "rhls_dec", scale="small", latency=20,
+                     rif=8)
+    b = run_workload("hashtable", "rhls_dec", scale="small", latency=20,
+                     rif=8, cap_slack=1)
+    assert a.cycles == b.cycles and a.correct and b.correct
+
+
+# -- dispatcher consultation --------------------------------------------------
+
+
+def test_dispatch_config_miss_returns_empty(tmp_cache):
+    assert dispatch_config("dae_gather", (8, 8, 8), "float32", True) == {}
+
+
+def test_dispatcher_uses_tuned_config_and_stays_correct(tmp_cache):
+    import jax.numpy as jnp
+    from repro.kernels.dae_merge import merge_sorted
+
+    key = make_key("dae_merge", (64, 64), "float32", "interpret", "wallclock")
+    default_cache().put(key, CacheEntry(config={"tile": 64}, score=1.0))
+    assert dispatch_config("dae_merge", (64, 64), np.dtype("float32"),
+                           True) == {"tile": 64}
+    r = np.random.default_rng(0)
+    a = jnp.sort(jnp.asarray(r.standard_normal(64), jnp.float32))
+    b = jnp.sort(jnp.asarray(r.standard_normal(64), jnp.float32))
+    out = merge_sorted(a, b, interpret=True)  # tile=None -> tuned tile=64
+    ref = np.sort(np.concatenate([np.asarray(a), np.asarray(b)]))
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_gather_plan_rif_fallback_dispatch(tmp_cache):
+    import jax.numpy as jnp
+    from repro.kernels.dae_gather import dae_gather
+
+    r = np.random.default_rng(0)
+    table = jnp.asarray(r.standard_normal((128, 128)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, 128, 32), jnp.int32)
+    # cache empty -> analytic plan_rif sizing; result must match the oracle
+    out = dae_gather(table, idx, method="rif", interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(table)[np.asarray(idx)])
+
+
+def test_cache_entry_json_is_plain(tmp_cache):
+    key = make_key("op", (1, 2), "f32", "cpu", "wallclock")
+    TuneCache(tmp_cache).put(key, CacheEntry(config={"rif": 4}, score=2.0))
+    raw = json.loads(tmp_cache.read_text())
+    assert raw["version"] == 1
+    assert raw["entries"][key]["config"] == {"rif": 4}
