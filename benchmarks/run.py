@@ -7,8 +7,11 @@
     fig4_golden       Fig. 4   (overhead over the golden reference)
     kernel_bench      decoupled-kernel microbenches + RIF/capacity sweeps
     tune              autotune decoupling params, persist the config cache
+    scale             N=1..16 tenants on one shared memory system
+                      (throughput degradation + channel-occupancy traces;
+                      --smoke for the CI-sized subset)
 
-Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 tune ...]
+Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 tune scale ...]
 """
 
 from __future__ import annotations
@@ -24,7 +27,13 @@ def _csv(line: str) -> None:
 
 
 def main() -> None:
-    want = set(sys.argv[1:])
+    flags = {a for a in sys.argv[1:] if a.startswith("-")}
+    want = {a for a in sys.argv[1:] if not a.startswith("-")}
+    if flags and not want:
+        # a bare flag must not select the run-everything default
+        print(f"error: flags {sorted(flags)} given without a benchmark "
+              f"selector (e.g. 'scale --smoke')", file=sys.stderr)
+        raise SystemExit(2)
 
     def on(name: str) -> bool:
         return not want or any(w in name for w in want)
@@ -48,6 +57,9 @@ def main() -> None:
     if on("tune"):
         from benchmarks import tune
         tune.run(_csv)
+    if on("scale"):
+        from benchmarks import scale
+        scale.run(_csv, smoke="--smoke" in flags)
 
 
 if __name__ == "__main__":

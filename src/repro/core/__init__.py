@@ -3,11 +3,17 @@
 Layers:
   * :mod:`repro.core.dae` / :mod:`repro.core.simulator` /
     :mod:`repro.core.workloads` — the paper-faithful programming model,
-    cycle-level simulator, and the seven benchmark programs (Tables 1/3,
-    Fig 4).
+    the multi-instance shared-memory engine (cycle-level simulation of
+    N concurrent programs with round-robin port arbitration), and the
+    seven benchmark programs (Tables 1/3, Fig 4) plus their
+    multi-tenant variants.
+  * :mod:`repro.core.trace` — streaming traces of per-channel
+    occupancy, request latency, and port utilization.
   * :mod:`repro.core.decouple` / :mod:`repro.core.pipeline` — the
     TPU-native decoupled ops (Pallas kernels behind a JAX API) and RIF
     planning used by the LM framework.
+
+See ``docs/architecture.md`` for the full paper→code map.
 """
 
 from repro.core.decouple import *  # noqa: F401,F403

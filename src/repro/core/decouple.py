@@ -8,8 +8,14 @@ Every op has three dispatch modes:
   * interpret    — kernels executed in interpret mode (CPU validation).
 
 The RIF (requests-in-flight) knob of the paper maps to the buffer-ring
-depth; ``repro.core.pipeline.plan_rif`` picks it from the
-latency-bandwidth product.
+depth.  Knobs left at ``None`` resolve in dispatch order (see
+``repro.kernels.common.tuned_knobs``):
+
+  1. an explicit caller value always wins;
+  2. else the ``repro.tune`` config cache is consulted for a winner
+     tuned at this (op, shape, dtype, backend) key;
+  3. else ``repro.core.pipeline.plan_rif`` sizes the ring analytically
+     from the latency-bandwidth product.
 """
 
 from __future__ import annotations

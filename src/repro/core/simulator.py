@@ -32,6 +32,19 @@ Semantics enforced here (paper §5.1/§5.4):
 ``Par`` bundles several effects into one issue slot — the dataflow
 circuit equivalent of consuming the ``val`` and ``vec`` responses in the
 same cycle in decoupled SPMV (paper Listing 2).
+
+Multi-instance execution: the scheduler is an engine
+(:class:`SharedMemoryEngine`) that runs **N concurrent program
+instances against one shared memory system** — the contention regime
+that motivates the paper's capacity bounding.  Each instance keeps its
+own channel namespace, store results, and cycle count; memory ports are
+either *private* to an instance or *shared*, in which case all
+instances compete for the port's one-issue-per-cycle slot (round-robin
+arbitration on ties) and for the memory model's outstanding-request
+budget.  :func:`simulate` is the single-instance wrapper and is
+bit-exact with the pre-engine scheduler.  An optional
+:class:`repro.core.trace.Tracer` streams per-channel occupancy,
+request-latency histograms, and port-utilization timelines.
 """
 
 from __future__ import annotations
@@ -63,6 +76,9 @@ __all__ = [
     "MomsMemory",
     "Par",
     "SimResult",
+    "EngineInstance",
+    "EngineResult",
+    "SharedMemoryEngine",
     "DeadlockError",
     "simulate",
 ]
@@ -282,13 +298,50 @@ class _Proc:
         self.blocked_on: Optional[str] = None
 
 
-class _Ctx:
-    def __init__(self, memories: Dict[str, MemoryModel]):
-        self.memories = memories
+@dataclasses.dataclass
+class EngineInstance:
+    """One tenant of the engine: a program plus its *private* memory
+    ports.  Ports not listed in ``memories`` resolve to the engine's
+    shared memory system — the instance competes with every other tenant
+    for those ports' issue slots and outstanding-request budget."""
+
+    name: str
+    program: DaeProgram
+    memories: Dict[str, MemoryModel] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Per-instance results plus the shared-run aggregates.
+
+    ``cycles`` is the makespan (slowest instance); ``instances`` holds
+    one :class:`SimResult` per tenant in submission order.  ``trace`` is
+    the :class:`repro.core.trace.TraceSummary` when a tracer was
+    attached, else ``None``.
+    """
+
+    cycles: int
+    instances: List[SimResult]
+    trace: Optional[Any] = None
+
+
+class _Inst:
+    """Engine-internal per-tenant state: its own channel namespace,
+    store results, and store-completion tracking."""
+
+    __slots__ = ("name", "index", "private", "procs", "chans",
+                 "port_last_store", "stores", "port_reads")
+
+    def __init__(self, name: str, index: int, program: DaeProgram,
+                 private: Dict[str, MemoryModel]):
+        self.name = name
+        self.index = index
+        self.private = private
+        self.procs = [_Proc(p) for p in program.processes]
         self.chans: Dict[str, _ChanState] = {}
-        self.port_next_issue: Dict[str, float] = {}
         self.port_last_store: Dict[str, float] = {}
         self.stores: Dict[str, Dict[int, Any]] = {}
+        self.port_reads: Dict[str, int] = {}
 
     def chan(self, c: Channel) -> _ChanState:
         st = self.chans.get(c.name)
@@ -296,22 +349,45 @@ class _Ctx:
             st = self.chans[c.name] = _ChanState()
         return st
 
-    def mem(self, port: str) -> MemoryModel:
-        try:
-            return self.memories[port]
-        except KeyError:
+
+class _Ctx:
+    """Shared engine state: the shared memory system, per-physical-port
+    issue serialization, and the (optional) tracer."""
+
+    def __init__(self, memories: Dict[str, MemoryModel], trace: Any = None):
+        self.memories = memories
+        # keyed by (owner, port): owner "" for shared ports, else the
+        # instance name — two tenants' private "out" ports must not
+        # serialize against each other
+        self.port_next_issue: Dict[Tuple[str, str], float] = {}
+        self.trace = trace
+
+    def mem(self, inst: _Inst, port: str) -> Tuple[MemoryModel, str]:
+        """Resolve ``port`` for ``inst``: private first, then shared.
+        Returns ``(memory, owner)`` with owner "" for shared ports."""
+        m = inst.private.get(port)
+        if m is not None:
+            return m, inst.name
+        m = self.memories.get(port)
+        if m is None:
             raise KeyError(
                 f"program references port {port!r} with no memory model bound"
             )
+        return m, ""
 
 
-def _readiness(ctx: _Ctx, eff: Any, t: float) -> Tuple[bool, float, str]:
+def _port_label(owner: str, port: str) -> str:
+    return f"{owner}/{port}" if owner else port
+
+
+def _readiness(ctx: _Ctx, inst: _Inst, eff: Any, t: float
+               ) -> Tuple[bool, float, str]:
     """Can ``eff`` execute at time t?  -> (ok, retry_time, reason)."""
     if isinstance(eff, (Delay, Halt, Store)):
         return True, t, ""
     if isinstance(eff, Req):
         c = eff.channel
-        st = ctx.chan(c)
+        st = inst.chan(c)
         if len(st.fifo) >= c.capacity:
             # clears only when the consumer takes a response (unknown time);
             # if the front entry is still in flight, its landing time is a
@@ -319,13 +395,14 @@ def _readiness(ctx: _Ctx, eff: Any, t: float) -> Tuple[bool, float, str]:
             front_ready = st.fifo[0][0] if st.fifo else INF
             retry = front_ready if front_ready > t else INF
             return False, retry, f"cap:{c.name}"
-        t_issue = max(t, ctx.port_next_issue.get(c.port, 0.0))
-        slot = ctx.mem(c.port).free_slot_at(t_issue)
+        mem, owner = ctx.mem(inst, c.port)
+        t_issue = max(t, ctx.port_next_issue.get((owner, c.port), 0.0))
+        slot = mem.free_slot_at(t_issue)
         if slot > t:
             return False, slot, f"mshr:{c.port}"
         return True, t, ""
     if isinstance(eff, Resp):
-        st = ctx.chan(eff.channel)
+        st = inst.chan(eff.channel)
         if not st.fifo:
             return False, INF, f"resp:{eff.channel.name}"
         ready = st.fifo[0][0]
@@ -333,12 +410,12 @@ def _readiness(ctx: _Ctx, eff: Any, t: float) -> Tuple[bool, float, str]:
             return False, ready, f"resp-wait:{eff.channel.name}"
         return True, t, ""
     if isinstance(eff, Enq):
-        st = ctx.chan(eff.channel)
+        st = inst.chan(eff.channel)
         if len(st.fifo) >= eff.channel.capacity:
             return False, INF, f"full:{eff.channel.name}"
         return True, t, ""
     if isinstance(eff, Deq):
-        st = ctx.chan(eff.channel)
+        st = inst.chan(eff.channel)
         if not st.fifo:
             return False, INF, f"empty:{eff.channel.name}"
         ready = st.fifo[0][0]
@@ -346,7 +423,7 @@ def _readiness(ctx: _Ctx, eff: Any, t: float) -> Tuple[bool, float, str]:
             return False, ready, f"deq-wait:{eff.channel.name}"
         return True, t, ""
     if isinstance(eff, StoreWait):
-        done_at = ctx.port_last_store.get(eff.port, 0.0)
+        done_at = inst.port_last_store.get(eff.port, 0.0)
         if done_at > t:
             return False, done_at, f"storewait:{eff.port}"
         return True, t, ""
@@ -354,7 +431,7 @@ def _readiness(ctx: _Ctx, eff: Any, t: float) -> Tuple[bool, float, str]:
         retries: List[float] = []
         reasons: List[str] = []
         for sub in eff.effects:
-            ok, retry, reason = _readiness(ctx, sub, t)
+            ok, retry, reason = _readiness(ctx, inst, sub, t)
             if not ok:
                 retries.append(retry)
                 reasons.append(reason)
@@ -366,143 +443,244 @@ def _readiness(ctx: _Ctx, eff: Any, t: float) -> Tuple[bool, float, str]:
             return False, (min(finite) if finite else INF), "&".join(reasons)
         return True, t, ""
     if isinstance(eff, Fused):
-        return _readiness(ctx, eff.first, t)
+        return _readiness(ctx, inst, eff.first, t)
     raise TypeError(f"unknown effect {eff!r}")
 
 
-def _execute(ctx: _Ctx, eff: Any, t: float) -> Any:
+def _execute(ctx: _Ctx, inst: _Inst, eff: Any, t: float) -> Any:
     """Execute a ready effect at time t; returns the value to send."""
     if isinstance(eff, (Delay, Halt)):
         return None
     if isinstance(eff, Req):
         c = eff.channel
-        st = ctx.chan(c)
-        t_issue = max(t, ctx.port_next_issue.get(c.port, 0.0))
-        mem = ctx.mem(c.port)
+        st = inst.chan(c)
+        mem, owner = ctx.mem(inst, c.port)
+        key = (owner, c.port)
+        t_issue = max(t, ctx.port_next_issue.get(key, 0.0))
         t_done, value = mem.access(eff.addr, t_issue)
-        ctx.port_next_issue[c.port] = t_issue + 1.0
+        ctx.port_next_issue[key] = t_issue + 1.0
         st.fifo.append((t_done, value))
         st.reqs += 1
+        inst.port_reads[c.port] = inst.port_reads.get(c.port, 0) + 1
+        if ctx.trace is not None:
+            ctx.trace.on_request(inst.name, c.name,
+                                 _port_label(owner, c.port), t_issue, t_done)
+            ctx.trace.on_occupancy(inst.name, c.name, len(st.fifo))
         return None
     if isinstance(eff, Resp):
-        st = ctx.chan(eff.channel)
+        st = inst.chan(eff.channel)
         _, value = st.fifo.popleft()
         st.resps += 1
+        if ctx.trace is not None:
+            ctx.trace.on_occupancy(inst.name, eff.channel.name,
+                                   len(st.fifo))
         return value
     if isinstance(eff, Enq):
-        st = ctx.chan(eff.channel)
+        st = inst.chan(eff.channel)
         st.fifo.append((t + 1.0, eff.value))
         st.enqs += 1
+        if ctx.trace is not None:
+            ctx.trace.on_occupancy(inst.name, eff.channel.name,
+                                   len(st.fifo))
         return None
     if isinstance(eff, Deq):
-        st = ctx.chan(eff.channel)
+        st = inst.chan(eff.channel)
         _, value = st.fifo.popleft()
         st.deqs += 1
+        if ctx.trace is not None:
+            ctx.trace.on_occupancy(inst.name, eff.channel.name,
+                                   len(st.fifo))
         return value
     if isinstance(eff, Store):
         port = eff.port
-        mem = ctx.mem(port)
+        mem, owner = ctx.mem(inst, port)
         mem.writes += 1
-        t_issue = max(t, ctx.port_next_issue.get(port, 0.0))
-        ctx.port_next_issue[port] = t_issue + 1.0
+        key = (owner, port)
+        t_issue = max(t, ctx.port_next_issue.get(key, 0.0))
+        ctx.port_next_issue[key] = t_issue + 1.0
         t_done = t_issue + mem.write_latency()
-        ctx.port_last_store[port] = max(ctx.port_last_store.get(port, 0.0), t_done)
-        ctx.stores.setdefault(port, {})[eff.addr] = eff.value
+        inst.port_last_store[port] = max(
+            inst.port_last_store.get(port, 0.0), t_done)
+        inst.stores.setdefault(port, {})[eff.addr] = eff.value
         try:
             mem.data[eff.addr] = eff.value
         except (TypeError, IndexError, KeyError):
             pass
+        if ctx.trace is not None:
+            ctx.trace.on_store(inst.name, _port_label(owner, port), t_issue)
         return None
     if isinstance(eff, StoreWait):
         return None
     if isinstance(eff, Par):
-        return tuple(_execute(ctx, sub, t) for sub in eff.effects)
+        return tuple(_execute(ctx, inst, sub, t) for sub in eff.effects)
     if isinstance(eff, Fused):
-        value = _execute(ctx, eff.first, t)
+        value = _execute(ctx, inst, eff.first, t)
         follow = eff.then(value)
         if follow is not None:
-            _execute(ctx, follow, t)
+            _execute(ctx, inst, follow, t)
         return value
     raise TypeError(f"unknown effect {eff!r}")
+
+
+class SharedMemoryEngine:
+    """Execute N concurrent DAE program instances against one shared
+    memory system.
+
+    * **Round-robin port arbitration** — live processes are scheduled in
+      local-time order; among processes tied at the same time the
+      starting instance rotates every scheduler pass, so no tenant can
+      persistently win a shared port's issue slot.  With one instance
+      the order degenerates to the legacy scheduler's, making
+      :func:`simulate` bit-exact with the pre-engine implementation.
+    * **Per-instance cycle accounting** — each tenant's cycle count is
+      the completion time of its own processes and stores; the engine's
+      ``cycles`` is the makespan.
+    * **Shared outstanding-request budget** — a shared port's
+      ``max_outstanding`` (the MOMS MSHR budget) is one pool all
+      tenants draw from, which is exactly the §5.4 contention regime.
+
+    Conservation (§5.1) is checked per instance at termination; a global
+    scheduling fixpoint with no runnable process raises
+    :class:`DeadlockError` naming every blocked process.
+    """
+
+    def __init__(self, instances: Sequence[EngineInstance],
+                 shared_memories: Optional[Dict[str, MemoryModel]] = None,
+                 *, tracer: Any = None, max_steps: int = 500_000_000):
+        if not instances:
+            raise ValueError("SharedMemoryEngine needs at least one instance")
+        names = [i.name for i in instances]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate instance names: {names}")
+        self.instances = list(instances)
+        self.shared = dict(shared_memories or {})
+        self.tracer = tracer
+        self.max_steps = max_steps
+
+    def run(self) -> EngineResult:
+        insts = [_Inst(spec.name, i, spec.program, spec.memories)
+                 for i, spec in enumerate(self.instances)]
+        pairs = [(inst, p) for inst in insts for p in inst.procs]
+        n_inst = len(insts)
+        ctx = _Ctx(self.shared, self.tracer)
+
+        steps = 0
+        rotation = 0
+        while True:
+            steps += 1
+            if steps > self.max_steps:
+                raise RuntimeError("simulation step limit exceeded")
+
+            for inst, p in pairs:
+                if not p.done and p.effect is None:
+                    try:
+                        p.effect = p.proc.gen.send(p.send)
+                        p.send = None
+                    except StopIteration:
+                        p.done = True
+            live = [(inst, p) for inst, p in pairs if not p.done]
+            if not live:
+                break
+
+            if n_inst > 1:
+                rot = rotation
+                order = sorted(live, key=lambda ip: (
+                    ip[1].time, (ip[0].index - rot) % n_inst))
+            else:
+                order = sorted(live, key=lambda ip: ip[1].time)
+            rotation += 1
+
+            progressed = False
+            best_retry = INF
+            for inst, p in order:
+                eff, t, ii = p.effect, p.time, p.proc.ii
+                ok, retry, reason = _readiness(ctx, inst, eff, t)
+                if not ok:
+                    best_retry = min(best_retry, retry)
+                    p.blocked_on = reason
+                    continue
+                p.send = _execute(ctx, inst, eff, t)
+                if isinstance(eff, Delay):
+                    p.time = t + max(eff.cycles, 0)
+                else:
+                    p.time = t + ii
+                if isinstance(eff, Halt):
+                    p.done = True
+                p.effect = None
+                p.blocked_on = None
+                progressed = True
+
+            if not progressed:
+                if best_retry is INF:
+                    if n_inst == 1:
+                        blocked = {p.proc.name: p.blocked_on
+                                   for _, p in live}
+                        raise DeadlockError(
+                            f"deadlock in program "
+                            f"{self.instances[0].program.name!r}: {blocked}")
+                    blocked = {f"{inst.name}:{p.proc.name}": p.blocked_on
+                               for inst, p in live}
+                    raise DeadlockError(
+                        f"deadlock across {n_inst} instances: {blocked}")
+                for inst, p in pairs:
+                    if not p.done and p.time < best_retry:
+                        p.time = best_retry
+
+        results = [self._finalize(inst) for inst in insts]
+        makespan = max([r.cycles for r in results] + [0])
+        trace = self.tracer.summary() if self.tracer is not None else None
+        return EngineResult(cycles=makespan, instances=results, trace=trace)
+
+    def _finalize(self, inst: _Inst) -> SimResult:
+        counts: Dict[str, int] = {}
+        for name, st in inst.chans.items():
+            if st.fifo:
+                raise ConservationError(
+                    f"channel {name!r} finished with {len(st.fifo)} "
+                    f"undrained entries"
+                )
+            if st.reqs != st.resps:
+                raise ConservationError(
+                    f"channel {name!r}: {st.reqs} requests but "
+                    f"{st.resps} responses"
+                )
+            if st.enqs != st.deqs:
+                raise ConservationError(
+                    f"channel {name!r}: {st.enqs} enqs but {st.deqs} deqs"
+                )
+            counts[name] = st.reqs + st.enqs
+
+        t_end = max(
+            [p.time for p in inst.procs]
+            + list(inst.port_last_store.values()) + [0.0]
+        )
+        # per-instance attribution: only the reads THIS tenant issued —
+        # a shared model's global .reads counter would credit every
+        # tenant with the whole port's traffic
+        visible = dict(self.shared)
+        visible.update(inst.private)
+        return SimResult(
+            cycles=int(round(t_end)),
+            stores=inst.stores,
+            counts=counts,
+            mem_reads={port: inst.port_reads.get(port, 0)
+                       for port in visible},
+        )
 
 
 def simulate(
     program: DaeProgram,
     memories: Dict[str, MemoryModel],
     max_steps: int = 500_000_000,
+    tracer: Any = None,
 ) -> SimResult:
-    """Run ``program`` against ``memories`` (one entry per port name)."""
+    """Run ``program`` against ``memories`` (one entry per port name).
 
-    procs = [_Proc(p) for p in program.processes]
-    ctx = _Ctx(memories)
-
-    steps = 0
-    while True:
-        steps += 1
-        if steps > max_steps:
-            raise RuntimeError("simulation step limit exceeded")
-
-        for p in procs:
-            if not p.done and p.effect is None:
-                try:
-                    p.effect = p.proc.gen.send(p.send)
-                    p.send = None
-                except StopIteration:
-                    p.done = True
-        live = [p for p in procs if not p.done]
-        if not live:
-            break
-
-        progressed = False
-        best_retry = INF
-        for p in sorted(live, key=lambda q: q.time):
-            eff, t, ii = p.effect, p.time, p.proc.ii
-            ok, retry, reason = _readiness(ctx, eff, t)
-            if not ok:
-                best_retry = min(best_retry, retry)
-                p.blocked_on = reason
-                continue
-            p.send = _execute(ctx, eff, t)
-            if isinstance(eff, Delay):
-                p.time = t + max(eff.cycles, 0)
-            else:
-                p.time = t + ii
-            if isinstance(eff, Halt):
-                p.done = True
-            p.effect = None
-            p.blocked_on = None
-            progressed = True
-
-        if not progressed:
-            if best_retry is INF:
-                blocked = {p.proc.name: p.blocked_on for p in live}
-                raise DeadlockError(f"deadlock in program {program.name!r}: {blocked}")
-            for p in procs:
-                if not p.done and p.time < best_retry:
-                    p.time = best_retry
-
-    counts: Dict[str, int] = {}
-    for name, st in ctx.chans.items():
-        if st.fifo:
-            raise ConservationError(
-                f"channel {name!r} finished with {len(st.fifo)} undrained entries"
-            )
-        if st.reqs != st.resps:
-            raise ConservationError(
-                f"channel {name!r}: {st.reqs} requests but {st.resps} responses"
-            )
-        if st.enqs != st.deqs:
-            raise ConservationError(
-                f"channel {name!r}: {st.enqs} enqs but {st.deqs} deqs"
-            )
-        counts[name] = st.reqs + st.enqs
-
-    t_end = max(
-        [p.time for p in procs] + list(ctx.port_last_store.values()) + [0.0]
-    )
-    return SimResult(
-        cycles=int(round(t_end)),
-        stores=ctx.stores,
-        counts=counts,
-        mem_reads={port: m.reads for port, m in memories.items()},
-    )
+    Single-instance wrapper over :class:`SharedMemoryEngine`; all ports
+    are bound as shared (with one tenant there is nobody to share with,
+    so the timing is identical to the legacy single-program scheduler).
+    """
+    engine = SharedMemoryEngine(
+        [EngineInstance("", program)], memories,
+        tracer=tracer, max_steps=max_steps)
+    return engine.run().instances[0]

@@ -57,16 +57,20 @@ from repro.core.dae import (
 )
 from repro.core.simulator import (
     DeadlockError,
+    EngineInstance,
     FixedLatencyMemory,
     Fused,
     MemoryModel,
     MomsMemory,
     Par,
+    SharedMemoryEngine,
     SimResult,
     simulate,
 )
+from repro.core.trace import Tracer, TraceSummary
 
-__all__ = ["BENCHMARKS", "CONFIGS", "run_workload", "WorkloadReport"]
+__all__ = ["BENCHMARKS", "CONFIGS", "MULTI_BENCHMARKS", "run_workload",
+           "run_workload_multi", "WorkloadReport", "MultiWorkloadReport"]
 
 CONFIGS = ("vitis", "vitis_dec", "rhls", "rhls_stream", "rhls_dec")
 BENCHMARKS = (
@@ -417,11 +421,13 @@ def _chan_cap(rif: int, cap: Optional[int]) -> int:
 
 
 def _binsearch_phases(data, config, early, latency, rif, mem_factory,
-                      cap=None):
+                      cap=None, shared_mems=None):
     arr, keys, n = data["arr"], data["keys"], data["n"]
     iters_fixed = int(math.ceil(math.log2(n)))
+    shared_mems = shared_mems or {}
     mems = {
-        "table": mem_factory("table", list(arr)),
+        "table": shared_mems.get("table")
+        or mem_factory("table", list(arr)),
         "out": FixedLatencyMemory([None] * len(keys), latency),
     }
 
@@ -514,11 +520,14 @@ def _binsearch_phases(data, config, early, latency, rif, mem_factory,
 # ---------------------------------------------------------------------------
 
 
-def _hashtable_phases(data, config, latency, rif, mem_factory, cap=None):
+def _hashtable_phases(data, config, latency, rif, mem_factory, cap=None,
+                      shared_mems=None):
     entries, keys, heads = data["entries"], data["keys"], data["heads"]
     chain_len = data["chain_len"]
+    shared_mems = shared_mems or {}
     mems = {
-        "table": mem_factory("table", list(entries)),
+        "table": shared_mems.get("table")
+        or mem_factory("table", list(entries)),
         "out": FixedLatencyMemory([None] * len(keys), latency),
     }
 
@@ -595,7 +604,8 @@ def _hashtable_phases(data, config, latency, rif, mem_factory, cap=None):
 
 
 def _spmv_program(rows, cols, val, vec_data, out_data, config, latency, rif,
-                  mem_factory, tag="spmv", store_gate=0, cap=None):
+                  mem_factory, tag="spmv", store_gate=0, cap=None,
+                  shared_mems=None):
     """Build one SPMV DaeProgram writing results to out_data via port 'out'."""
     nrows = len(rows) - 1
     nnz = int(rows[-1])
@@ -615,11 +625,16 @@ def _spmv_program(rows, cols, val, vec_data, out_data, config, latency, rif,
     bounds_exec = StreamChannel(f"{tag}_bexec", capacity=nrows + 2)
     bounds_addr = StreamChannel(f"{tag}_baddr", capacity=nrows + 2)
 
+    shared_mems = shared_mems or {}
+
+    def _mem(port, build_data):
+        return shared_mems.get(port) or mem_factory(port, build_data())
+
     mems = {
-        "rows": mem_factory("rows", list(int(x) for x in rows)),
-        "val": mem_factory("val", list(float(x) for x in val)),
-        "cols": mem_factory("cols", list(int(x) for x in cols)),
-        "vec": mem_factory("vec", vec_data),
+        "rows": _mem("rows", lambda: list(int(x) for x in rows)),
+        "val": _mem("val", lambda: list(float(x) for x in val)),
+        "cols": _mem("cols", lambda: list(int(x) for x in cols)),
+        "vec": _mem("vec", lambda: vec_data),
         "out": FixedLatencyMemory(out_data, latency),
     }
 
@@ -714,12 +729,17 @@ def _spmv_program(rows, cols, val, vec_data, out_data, config, latency, rif,
     return DaeProgram(f"{tag}[{config}]", procs), mems
 
 
-def _spmv_phases(data, config, latency, rif, mem_factory, cap=None):
+def _spmv_phases(data, config, latency, rif, mem_factory, cap=None,
+                 shared_mems=None):
     rows, cols, val, vec = data["rows"], data["cols"], data["val"], data["vec"]
-    vec_data = list(float(x) for x in vec)
+    if shared_mems and "vec" in shared_mems:
+        vec_data = shared_mems["vec"].data
+    else:
+        vec_data = list(float(x) for x in vec)
     out_data = [0.0] * data["nrows"]
     prog, mems = _spmv_program(rows, cols, val, vec_data, out_data, config,
-                               latency, rif, mem_factory, cap=cap)
+                               latency, rif, mem_factory, cap=cap,
+                               shared_mems=shared_mems)
     expected = spmv_ref(rows, cols, val, vec)
 
     def check(result: SimResult) -> bool:
@@ -736,12 +756,19 @@ def _spmv_phases(data, config, latency, rif, mem_factory, cap=None):
 
 
 def _merge_pass_program(src_data, dst_data, n, width, config, latency, rif,
-                        mem_factory, src_port, dst_port, cap=None):
-    """One bottom-up pass: merge width-runs of src into 2*width-runs of dst."""
+                        mem_factory, src_port, dst_port, cap=None, base=0,
+                        mems=None):
+    """One bottom-up pass: merge width-runs of src into 2*width-runs of dst.
+
+    ``base`` offsets every address by a fixed amount so multiple tenants
+    can sort disjoint ranges of one shared array; ``mems`` supplies
+    pre-built (shared) memory models instead of creating private ones.
+    """
     merges = []
     lo = 0
     while lo < n:
-        merges.append((lo, min(lo + width, n), min(lo + 2 * width, n)))
+        merges.append((base + lo, base + min(lo + width, n),
+                       base + min(lo + 2 * width, n)))
         lo += 2 * width
 
     # Vitis burst_maxi: only one request/response pair outstanding per
@@ -750,10 +777,11 @@ def _merge_pass_program(src_data, dst_data, n, width, config, latency, rif,
     i_ch = LoadChannel(f"ms_i_{src_port}", capacity=ch_cap, port=src_port)
     j_ch = LoadChannel(f"ms_j_{src_port}", capacity=ch_cap, port=src_port)
 
-    mems = {
-        src_port: mem_factory(src_port, src_data),
-        dst_port: mem_factory(dst_port, dst_data),
-    }
+    if mems is None:
+        mems = {
+            src_port: mem_factory(src_port, src_data),
+            dst_port: mem_factory(dst_port, dst_data),
+        }
 
     if config in ("vitis", "rhls"):
         ovh = VITIS_OVH if config == "vitis" else 0
@@ -844,27 +872,29 @@ def _merge_pass_program(src_data, dst_data, n, width, config, latency, rif,
 
 
 def _copy_pass_program(src_data, dst_data, n, config, latency, rif,
-                       mem_factory, src_port, dst_port, cap=None):
+                       mem_factory, src_port, dst_port, cap=None, base=0,
+                       mems=None):
     ch = LoadChannel(f"cp_{src_port}", capacity=_chan_cap(rif, cap),
                      port=src_port)
-    mems = {
-        src_port: mem_factory(src_port, src_data),
-        dst_port: mem_factory(dst_port, dst_data),
-    }
+    if mems is None:
+        mems = {
+            src_port: mem_factory(src_port, src_data),
+            dst_port: mem_factory(dst_port, dst_data),
+        }
     if config in ("vitis",):
         def gen():
             yield Delay(latency)  # burst fill
-            for k in range(n):
+            for k in range(base, base + n):
                 yield Delay(2)
                 yield Store(dst_port, k, src_data[k])
         return DaeProgram("copy[vitis]", [Process("copy", gen())]), mems
 
     def p_req():
-        for k in range(n):
+        for k in range(base, base + n):
             yield Req(ch, k)
 
     def p_copy():
-        for k in range(n):
+        for k in range(base, base + n):
             yield Fused(Resp(ch), lambda v, k=k: Store(dst_port, k, v))
 
     ii = VITIS_DEC_II if config == "vitis_dec" else 1
@@ -875,23 +905,23 @@ def _copy_pass_program(src_data, dst_data, n, config, latency, rif,
     )
 
 
-def _mergesort_phases(data, config, opt, latency, rif, mem_factory, cap=None):
-    n = data["n"]
-    table = [int(x) for x in data["table"]]
-    result = [0] * n
+def _mergesort_stream_deadlock() -> None:
+    # The disambiguation scheme couples the two fetch loops through one
+    # shared in-order queue; once run width exceeds the queue capacity
+    # the merge needs the j-run head while i-run values block the
+    # queue -> structural deadlock (paper §6).  We reproduce the
+    # detection rather than modelling the hang.
+    raise DeadlockError(
+        "R-HLS Stream mergesort: shared disambiguation queue between "
+        "the two fetch loops deadlocks (paper §6)")
 
-    if config == "rhls_stream":
-        # The disambiguation scheme couples the two fetch loops through one
-        # shared in-order queue; once run width exceeds the queue capacity
-        # the merge needs the j-run head while i-run values block the
-        # queue -> structural deadlock (paper §6).  We reproduce the
-        # detection rather than modelling the hang.
-        def phases():
-            raise DeadlockError(
-                "R-HLS Stream mergesort: shared disambiguation queue between "
-                "the two fetch loops deadlocks (paper §6)")
-        return phases, None, None
 
+def _mergesort_plan(table, result, n, opt):
+    """Bottom-up phase plan over two buffers: a list of
+    ``(kind, src, dst, width, src_port, dst_port)`` tuples plus the
+    buffer that holds the sorted data afterwards and the merge-pass
+    count.  The non-opt variant copies back after every merge; the opt
+    variant ping-pongs the buffers instead (§4.2)."""
     phases = []
     width = 1
     src, dst = table, result
@@ -904,11 +934,21 @@ def _mergesort_phases(data, config, opt, latency, rif, mem_factory, cap=None):
         else:
             phases.append(("copy", dst, src, None, dst_port, src_port))
         width *= 2
-
     passes = len([p for p in phases if p[0] == "merge"])
+    return phases, src, passes
+
+
+def _mergesort_phases(data, config, opt, latency, rif, mem_factory, cap=None):
+    n = data["n"]
+    table = [int(x) for x in data["table"]]
+    result = [0] * n
+
+    if config == "rhls_stream":
+        return _mergesort_stream_deadlock, None, None
+
+    phases, final_holder, passes = _mergesort_plan(table, result, n, opt)
     golden = n * passes
     expected = np.sort(data["table"])
-    final_holder = src  # after the loop, src holds the sorted data
 
     def build():
         out = []
@@ -1152,3 +1192,233 @@ def run_workload(
                               total / golden - 1, check(None), reads)
 
     raise ValueError(f"unknown benchmark {benchmark!r}")
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant variants: N program instances, one shared memory system
+# ---------------------------------------------------------------------------
+
+# ports the tenants share (contended) per benchmark; every other port
+# referenced by a program is private to its instance
+MULTI_SHARED_PORTS = {
+    "binsearch": ("table",),
+    "binsearch_for": ("table",),
+    "hashtable": ("table",),
+    "spmv": ("rows", "val", "cols", "vec"),
+    "mergesort": ("table", "result"),
+    "mergesort_opt": ("table", "result"),
+}
+MULTI_BENCHMARKS = tuple(MULTI_SHARED_PORTS)
+
+
+@dataclasses.dataclass
+class MultiWorkloadReport:
+    """One multi-tenant simulation: N instances of a benchmark sharing
+    the irregular-data memory port(s)."""
+
+    benchmark: str
+    config: str
+    scale: str
+    n_instances: int
+    cycles: int                      # makespan across instances
+    per_instance_cycles: List[int]
+    golden: int                      # golden loads summed over instances
+    correct: bool
+    mem_reads: Dict[str, int]
+    trace: Optional[TraceSummary] = None
+
+    @property
+    def throughput_per_instance(self) -> float:
+        """Golden work items retired per cycle per tenant — the quantity
+        whose degradation with N the ``scale`` benchmark reports."""
+        return (self.golden / self.n_instances) / max(1, self.cycles)
+
+
+def _tenant_binsearch_data(data0: Dict[str, Any], i: int,
+                           seed: int) -> Dict[str, Any]:
+    """Tenant i queries the SAME sorted table with its own key set."""
+    if i == 0:
+        return data0
+    r = _rng(seed + 7919 * i)
+    keys = data0["arr"][r.integers(0, data0["n"], size=len(data0["keys"]))]
+    return {**data0, "keys": keys}
+
+
+def _tenant_hashtable_data(data0: Dict[str, Any], i: int,
+                           seed: int) -> Dict[str, Any]:
+    """Tenant i walks the SAME chains in its own (permuted) order."""
+    if i == 0:
+        return data0
+    r = _rng(seed + 7919 * i)
+    perm = r.permutation(data0["chains"])
+    return {**data0,
+            "keys": [data0["keys"][p] for p in perm],
+            "heads": [data0["heads"][p] for p in perm]}
+
+
+def _merge_reads(shared: Dict[str, MemoryModel],
+                 privates: List[Dict[str, MemoryModel]]) -> Dict[str, int]:
+    reads = {p: m.reads for p, m in shared.items()}
+    for mems in privates:
+        for p, m in mems.items():
+            reads[p] = reads.get(p, 0) + m.reads
+    return reads
+
+
+def _multi_run_single_phase(instances, shared, checks, tracer):
+    res = SharedMemoryEngine(instances, shared, tracer=tracer).run()
+    correct = all(chk(r) for chk, r in zip(checks, res.instances))
+    return res, correct
+
+
+def run_workload_multi(
+    benchmark: str,
+    config: str,
+    n_instances: int,
+    *,
+    scale: str = "small",
+    mem: str = "fixed",
+    latency: int = 100,
+    rif: int = 128,
+    max_outstanding: Optional[int] = None,
+    seed: int = 0,
+    cap_slack: Optional[int] = None,
+    trace: bool = False,
+    trace_bin_cycles: int = 64,
+) -> MultiWorkloadReport:
+    """Simulate ``n_instances`` concurrent tenants of one benchmark
+    sharing the irregular-data port(s) of a single memory system.
+
+    Tenants are independent program instances (own channels, own ``out``
+    port) contending for the shared ports' issue slots and — under
+    ``max_outstanding`` — one outstanding-request budget.  Read-only
+    benchmarks (binsearch/hashtable/spmv) share the actual data arrays;
+    the mergesorts give each tenant a disjoint range of one shared
+    array.  ``n_instances == 1`` reproduces :func:`run_workload`'s cycle
+    counts exactly.
+
+    With ``trace=True`` the report carries a
+    :class:`repro.core.trace.TraceSummary` of per-channel occupancy,
+    request-latency histograms, and shared-port utilization.  For
+    multi-pass benchmarks (mergesort) the tracer accumulates across
+    passes; pass-local times restart at zero, so port timelines overlay
+    the passes rather than concatenating them.
+    """
+    if config not in CONFIGS:
+        raise ValueError(f"unknown config {config!r}")
+    if benchmark not in MULTI_SHARED_PORTS:
+        raise ValueError(
+            f"benchmark {benchmark!r} has no multi-tenant variant "
+            f"(supported: {MULTI_BENCHMARKS})")
+    if n_instances < 1:
+        raise ValueError("n_instances must be >= 1")
+    cap = None if cap_slack is None else max(1, rif + cap_slack)
+    mem_factory = _mem_factory_for(mem, latency, max_outstanding,
+                                   MOMS_PORTS.get(benchmark, ()))
+    tracer = Tracer(trace_bin_cycles) if trace else None
+    shared_ports = MULTI_SHARED_PORTS[benchmark]
+
+    if benchmark in ("binsearch", "binsearch_for", "hashtable"):
+        early = benchmark == "binsearch"
+        if benchmark == "hashtable":
+            data0 = make_hashtable_data(scale, seed)
+            tenant = _tenant_hashtable_data
+        else:
+            data0 = make_binsearch_data(scale, seed)
+            tenant = _tenant_binsearch_data
+        shared: Optional[Dict[str, MemoryModel]] = None
+        instances, checks, goldens, privates = [], [], [], []
+        for i in range(n_instances):
+            data = tenant(data0, i, seed)
+            if benchmark == "hashtable":
+                progs, mems, golden, check = _hashtable_phases(
+                    data, config, latency, rif, mem_factory, cap=cap,
+                    shared_mems=shared)
+            else:
+                progs, mems, golden, check = _binsearch_phases(
+                    data, config, early, latency, rif, mem_factory, cap=cap,
+                    shared_mems=shared)
+            if shared is None:
+                shared = {p: mems[p] for p in shared_ports}
+            private = {p: m for p, m in mems.items() if p not in shared_ports}
+            instances.append(EngineInstance(f"t{i}", progs[0], private))
+            privates.append(private)
+            checks.append(check)
+            goldens.append(golden)
+        res, correct = _multi_run_single_phase(instances, shared, checks,
+                                               tracer)
+        return MultiWorkloadReport(
+            benchmark, config, scale, n_instances, res.cycles,
+            [r.cycles for r in res.instances], sum(goldens), correct,
+            _merge_reads(shared, privates), res.trace)
+
+    if benchmark == "spmv":
+        data = make_spmv_data(scale, seed)
+        shared = None
+        instances, checks, privates = [], [], []
+        for i in range(n_instances):
+            cells, golden, check = _spmv_phases(data, config, latency, rif,
+                                                mem_factory, cap=cap,
+                                                shared_mems=shared)
+            prog, mems = cells[0]
+            if shared is None:
+                shared = {p: mems[p] for p in shared_ports}
+            private = {p: m for p, m in mems.items() if p not in shared_ports}
+            instances.append(EngineInstance(f"t{i}", prog, private))
+            privates.append(private)
+            checks.append(lambda _r, chk=check: chk(None))
+        res, correct = _multi_run_single_phase(instances, shared, checks,
+                                               tracer)
+        return MultiWorkloadReport(
+            benchmark, config, scale, n_instances, res.cycles,
+            [r.cycles for r in res.instances],
+            n_instances * data["nnz"], correct,
+            _merge_reads(shared, privates), res.trace)
+
+    # mergesort / mergesort_opt: each tenant sorts its own n-element range
+    # of one shared table/result array pair; passes run phase-aligned
+    # (every tenant's pass-k programs share one engine run)
+    opt = benchmark == "mergesort_opt"
+    if config == "rhls_stream":
+        _mergesort_stream_deadlock()
+    datas = [make_mergesort_data(scale, seed + i) for i in range(n_instances)]
+    n = datas[0]["n"]
+    big_table = [int(x) for d in datas for x in d["table"]]
+    big_result = [0] * (n * n_instances)
+
+    phases, final_holder, passes = _mergesort_plan(big_table, big_result, n,
+                                                   opt)
+    expected = [np.sort(d["table"]) for d in datas]
+
+    total = 0
+    per_inst = [0] * n_instances
+    reads: Dict[str, int] = {}
+    for kind, s, d, w, sp, dp in phases:
+        shared = {sp: mem_factory(sp, s), dp: mem_factory(dp, d)}
+        instances = []
+        for i in range(n_instances):
+            if kind == "merge":
+                prog, _ = _merge_pass_program(s, d, n, w, config, latency,
+                                              rif, mem_factory, sp, dp,
+                                              cap=cap, base=i * n,
+                                              mems=shared)
+            else:
+                prog, _ = _copy_pass_program(s, d, n, config, latency, rif,
+                                             mem_factory, sp, dp, cap=cap,
+                                             base=i * n, mems=shared)
+            instances.append(EngineInstance(f"t{i}", prog))
+        res = SharedMemoryEngine(instances, shared, tracer=tracer).run()
+        total += res.cycles
+        for i, r in enumerate(res.instances):
+            per_inst[i] += r.cycles
+        for p, m in shared.items():
+            reads[p] = reads.get(p, 0) + m.reads
+
+    correct = all(
+        np.array_equal(np.array(final_holder[i * n:(i + 1) * n],
+                                dtype=np.int64), expected[i])
+        for i in range(n_instances))
+    return MultiWorkloadReport(
+        benchmark, config, scale, n_instances, total, per_inst,
+        n_instances * n * passes, correct, reads,
+        tracer.summary() if tracer is not None else None)

@@ -3,6 +3,12 @@
 All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
 validated on CPU with ``interpret=True``.  ``resolve_interpret`` picks
 interpret mode automatically when no explicit choice is given.
+
+``tuned_knobs`` implements the dispatchers' knob resolution order:
+an explicit caller value wins; a ``None`` knob consults the
+``repro.tune`` config cache for a winner tuned at this (op, shape,
+dtype, backend) key; on a cache miss the caller-supplied analytic
+fallback (typically derived from ``plan_rif``) applies.
 """
 
 from __future__ import annotations

@@ -28,7 +28,7 @@ from typing import Optional, Tuple
 from repro.tune.cache import (CacheEntry, TuneCache, cache_path,
                               default_cache, make_key, reset_default_cache)
 from repro.tune.runners import (KERNEL_DIMS, backend_tag, kernel_runner,
-                                workload_runner)
+                                multi_workload_runner, workload_runner)
 from repro.tune.search import TuneResult, search
 from repro.tune.space import (Config, SearchSpace, kernel_space,
                               workload_space)
@@ -37,7 +37,8 @@ __all__ = [
     "CacheEntry", "TuneCache", "TuneResult", "SearchSpace", "Config",
     "cache_path", "default_cache", "reset_default_cache", "make_key",
     "kernel_space", "workload_space", "kernel_runner", "workload_runner",
-    "KERNEL_DIMS", "tune_kernel", "tune_workload", "dispatch_config",
+    "multi_workload_runner", "KERNEL_DIMS", "tune_kernel", "tune_workload",
+    "dispatch_config",
 ]
 
 
@@ -71,13 +72,28 @@ def tune_kernel(op: str, dims: Optional[Tuple[int, ...]] = None, *,
 def tune_workload(benchmark: str, config: str = "rhls_dec", *,
                   scale: str = "small", mem: str = "fixed",
                   latency: int = 100, max_evals: int = 32,
-                  strategy: str = "auto",
+                  strategy: str = "auto", instances: int = 1,
                   cache: Optional[TuneCache] = None,
                   force: bool = False) -> TuneResult:
-    """Tune (rif, cap_slack) for a simulated DAE workload by cycle count."""
+    """Tune (rif, cap_slack) for a simulated DAE workload by cycle count.
+
+    ``instances > 1`` tunes for the multi-tenant contention regime: the
+    score is the makespan of N instances sharing one memory system
+    (:func:`repro.tune.runners.multi_workload_runner`), cached under a
+    distinct per-N key so contention-aware winners never shadow the
+    single-tenant ones.
+    """
+    if instances < 1:
+        raise ValueError(f"instances must be >= 1, got {instances}")
     cache = cache or default_cache()
-    measure, key = workload_runner(benchmark, config, scale=scale, mem=mem,
-                                   latency=latency)
+    if instances > 1:
+        measure, key = multi_workload_runner(benchmark, config,
+                                             n_instances=instances,
+                                             scale=scale, mem=mem,
+                                             latency=latency)
+    else:
+        measure, key = workload_runner(benchmark, config, scale=scale,
+                                       mem=mem, latency=latency)
     if not force:
         hit = cache.get(key)
         if hit is not None:

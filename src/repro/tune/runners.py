@@ -28,8 +28,8 @@ import numpy as np
 from repro.tune.cache import make_key
 from repro.tune.space import Config
 
-__all__ = ["kernel_runner", "workload_runner", "KERNEL_DIMS",
-           "backend_tag", "time_callable"]
+__all__ = ["kernel_runner", "workload_runner", "multi_workload_runner",
+           "KERNEL_DIMS", "backend_tag", "time_callable"]
 
 # default problem dimensions per op: modest sizes so a CPU interpret-mode
 # tuning sweep finishes in seconds, big enough that block shape matters
@@ -232,4 +232,36 @@ def workload_runner(benchmark: str, config: str = "rhls_dec", *,
 
     key = make_key(f"workload:{benchmark}:{config}", (), "int",
                    "sim", f"sim:{mem}:lat={latency}:scale={scale}")
+    return measure, key
+
+
+def multi_workload_runner(benchmark: str, config: str = "rhls_dec", *,
+                          n_instances: int = 4, scale: str = "small",
+                          mem: str = "fixed", latency: int = 100,
+                          max_outstanding: Optional[int] = 64):
+    """Contention-aware cycle measurement: score a config by the makespan
+    of ``n_instances`` tenants sharing one memory system.
+
+    The single-tenant optimum is often too aggressive under sharing —
+    a RIF sized to cover the full latency from one tenant over-subscribes
+    the shared outstanding-request budget once N tenants each carry it —
+    so knobs tuned here reflect the §5.4 contention regime directly.
+    Incorrect results score ``inf``; deadlocks propagate to the searcher's
+    deadlock penalty exactly as in :func:`workload_runner`.
+    """
+    from repro.core.workloads import run_workload_multi
+
+    def measure(cfg: Config) -> float:
+        rep = run_workload_multi(benchmark, config, n_instances,
+                                 scale=scale, mem=mem, latency=latency,
+                                 rif=cfg["rif"],
+                                 max_outstanding=max_outstanding,
+                                 cap_slack=cfg.get("cap_slack"))
+        if not rep.correct:
+            return float("inf")
+        return float(rep.cycles)
+
+    key = make_key(f"workload:{benchmark}:{config}", (n_instances,), "int",
+                   "sim", f"sim:{mem}:lat={latency}:scale={scale}"
+                   f":shared_mo={max_outstanding}")
     return measure, key

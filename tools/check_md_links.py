@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Check that relative Markdown links resolve to real files.
+
+Usage: python tools/check_md_links.py [file-or-dir ...]
+(defaults to README.md and docs/).  External links (http/https/mailto)
+are skipped; everything else is resolved relative to the containing
+file and must exist.  Anchored links (``path#section``) are checked for
+the file part only.  Exits non-zero listing every broken reference.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links [text](target); images ![alt](target) match too
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    # fenced code blocks routinely contain (parenthesized) pseudo-links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in _LINK.findall(text):
+        if target.startswith(_EXTERNAL):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:  # pure in-page anchor
+            continue
+        if not (md.parent / path).exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    roots = argv or ["README.md", "docs"]
+    files = []
+    for root in roots:
+        p = Path(root)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"warning: {root} does not exist", file=sys.stderr)
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
