@@ -7,9 +7,12 @@
     fig4_golden       Fig. 4   (overhead over the golden reference)
     kernel_bench      decoupled-kernel microbenches + RIF/capacity sweeps
     tune              autotune decoupling params, persist the config cache
-    scale             N=1..16 tenants on one shared memory system
+    scale             N=1..64 tenants on one shared memory system
                       (throughput degradation + channel-occupancy traces;
                       --smoke for the CI-sized subset)
+    engine-bench      event vs polling scheduler events/sec on the
+                      N-tenant hashtable cell (--smoke gates the event
+                      engine at >=5x on the contended N=96 cell)
 
 Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 tune scale ...]
 """
@@ -60,6 +63,9 @@ def main() -> None:
     if on("scale"):
         from benchmarks import scale
         scale.run(_csv, smoke="--smoke" in flags)
+    if on("engine-bench"):
+        from benchmarks import engine_bench
+        engine_bench.run(_csv, smoke="--smoke" in flags)
 
 
 if __name__ == "__main__":

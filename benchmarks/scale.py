@@ -1,7 +1,7 @@
 """Multi-instance scaling sweep: N tenants sharing one memory system.
 
-For each benchmark the sweep runs N in {1, 2, 4, 8, 16} concurrent
-instances against one shared memory model (shared port issue slots plus
+For each benchmark the sweep runs N in {1, 2, 4, 8, 16, 32, 64}
+concurrent instances against one shared memory model (shared port issue slots plus
 a shared 64-entry outstanding-request budget — the §5.4 contention
 regime) and reports:
 
@@ -16,13 +16,18 @@ regime) and reports:
 
 ``--smoke`` shrinks the sweep to one benchmark x N in {1, 2} so CI can
 exercise the engine on every push in seconds.
+
+N=64 became affordable with the event-driven scheduler: the legacy
+polling scheduler re-checks every process of every tenant on every
+pass, so large-N cells were quadratic-ish in practice (see
+``benchmarks/engine_bench.py`` for the measured event-vs-polling gap).
 """
 
 from __future__ import annotations
 
 from repro.core.workloads import MULTI_SHARED_PORTS, run_workload_multi
 
-NS = (1, 2, 4, 8, 16)
+NS = (1, 2, 4, 8, 16, 32, 64)
 SWEEP = (
     ("binsearch", "rhls_dec"),
     ("hashtable", "rhls_dec"),

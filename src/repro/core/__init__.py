@@ -4,7 +4,9 @@ Layers:
   * :mod:`repro.core.dae` / :mod:`repro.core.simulator` /
     :mod:`repro.core.workloads` — the paper-faithful programming model,
     the multi-instance shared-memory engine (cycle-level simulation of
-    N concurrent programs with round-robin port arbitration), and the
+    N concurrent programs with round-robin port arbitration; an
+    event-driven scheduler by default, with the legacy pass-based
+    scheduler kept as a bit-exact ``engine="polling"`` oracle), and the
     seven benchmark programs (Tables 1/3, Fig 4) plus their
     multi-tenant variants.
   * :mod:`repro.core.trace` — streaming traces of per-channel

@@ -45,12 +45,30 @@ budget.  :func:`simulate` is the single-instance wrapper and is
 bit-exact with the pre-engine scheduler.  An optional
 :class:`repro.core.trace.Tracer` streams per-channel occupancy,
 request-latency histograms, and port-utilization timelines.
+
+Two scheduler implementations share one semantics:
+
+  * ``engine="event"`` (default) — an event-driven scheduler: blocked
+    processes sit in wait-sets keyed by the channel/port event that
+    could unblock them (FIFO push/pop, port issue, store completion)
+    and are re-examined only when that event fires; the no-progress
+    clock jump comes from a retry-time heap instead of an O(procs)
+    sweep, and jumped time is a lazily applied global floor.  Scheduler
+    passes map 1:1 onto the polling scheduler's passes, so the
+    round-robin arbitration rotation — and therefore every cycle count,
+    store, trace record, and deadlock message — is bit-exact with
+    ``engine="polling"`` (pinned by ``tests/test_parity.py``).
+  * ``engine="polling"`` — the legacy pass-based scheduler that
+    re-checks readiness of every live process on every pass.  Kept as
+    the differential-testing oracle; O(procs) per pass, so large
+    multi-tenant sweeps are much slower on it.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import operator
 from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -72,6 +90,7 @@ from repro.core.dae import (
 )
 
 __all__ = [
+    "ENGINES",
     "FixedLatencyMemory",
     "MomsMemory",
     "Par",
@@ -276,7 +295,8 @@ class SimResult:
 
 
 class _ChanState:
-    __slots__ = ("fifo", "reqs", "resps", "enqs", "deqs")
+    __slots__ = ("fifo", "reqs", "resps", "enqs", "deqs",
+                 "push_key", "pop_key")
 
     def __init__(self) -> None:
         self.fifo: "deque[Tuple[float, Any]]" = deque()  # (ready_time, value)
@@ -284,10 +304,15 @@ class _ChanState:
         self.resps = 0
         self.enqs = 0
         self.deqs = 0
+        # event-engine wake keys, filled lazily by _chan_ev
+        self.push_key: Optional[Tuple] = None
+        self.pop_key: Optional[Tuple] = None
 
 
 class _Proc:
-    __slots__ = ("proc", "time", "effect", "send", "done", "blocked_on")
+    __slots__ = ("proc", "time", "effect", "send", "done", "blocked_on",
+                 "pos", "inst", "iidx", "gen", "vsnap", "stamp", "waits",
+                 "teff", "tkeys")
 
     def __init__(self, proc: Process):
         self.proc = proc
@@ -296,6 +321,17 @@ class _Proc:
         self.send: Any = None
         self.done = False
         self.blocked_on: Optional[str] = None
+        # event-engine bookkeeping (unused by the polling scheduler)
+        self.pos = 0                 # index into the engine's pairs list
+        self.inst: Any = None        # owning _Inst
+        self.iidx = 0                # owning instance index (arbitration)
+        self.gen = proc.gen          # bound generator (pump hot path)
+        self.vsnap: Any = None       # port-version snapshot under which
+                                     # the cached retry was computed
+        self.stamp = 0               # invalidates stale retry-heap entries
+        self.waits: Any = None       # (wake_keys, dirty_keys) while parked
+        self.teff: Any = None        # effect the trigger-key cache is for
+        self.tkeys: Any = None       # cached (wake_keys, dirty_keys)
 
 
 @dataclasses.dataclass
@@ -317,12 +353,17 @@ class EngineResult:
     ``cycles`` is the makespan (slowest instance); ``instances`` holds
     one :class:`SimResult` per tenant in submission order.  ``trace`` is
     the :class:`repro.core.trace.TraceSummary` when a tracer was
-    attached, else ``None``.
+    attached, else ``None``.  ``events`` counts executed effects and
+    ``passes`` scheduler passes — identical across the event and
+    polling engines (a parity invariant); events/second is the
+    throughput ``benchmarks.engine_bench`` compares.
     """
 
     cycles: int
     instances: List[SimResult]
     trace: Optional[Any] = None
+    events: int = 0
+    passes: int = 0
 
 
 class _Inst:
@@ -330,7 +371,7 @@ class _Inst:
     store results, and store-completion tracking."""
 
     __slots__ = ("name", "index", "private", "procs", "chans",
-                 "port_last_store", "stores", "port_reads")
+                 "port_last_store", "stores", "port_reads", "portcache")
 
     def __init__(self, name: str, index: int, program: DaeProgram,
                  private: Dict[str, MemoryModel]):
@@ -342,6 +383,9 @@ class _Inst:
         self.port_last_store: Dict[str, float] = {}
         self.stores: Dict[str, Dict[int, Any]] = {}
         self.port_reads: Dict[str, int] = {}
+        # event-engine cache: port -> (mem, owner, pni_key, issue_key,
+        # mem_key, store_key, trace_label); see _port_ev
+        self.portcache: Dict[str, Tuple] = {}
 
     def chan(self, c: Channel) -> _ChanState:
         st = self.chans.get(c.name)
@@ -359,8 +403,14 @@ class _Ctx:
         # keyed by (owner, port): owner "" for shared ports, else the
         # instance name — two tenants' private "out" ports must not
         # serialize against each other
-        self.port_next_issue: Dict[Tuple[str, str], float] = {}
+        self.port_next_issue: Dict[Tuple, float] = {}
         self.trace = trace
+        # side-channel from _ready_ev: a *blocked* Par evaluation sets
+        # this when one of its Req or StoreWait subs was ready (the
+        # non-monotone parks the event scheduler watches eagerly);
+        # per-run state so concurrent engine runs in one process cannot
+        # race on it
+        self.par_ready_req = False
 
     def mem(self, inst: _Inst, port: str) -> Tuple[MemoryModel, str]:
         """Resolve ``port`` for ``inst``: private first, then shared.
@@ -522,6 +572,286 @@ def _execute(ctx: _Ctx, inst: _Inst, eff: Any, t: float) -> Any:
     raise TypeError(f"unknown effect {eff!r}")
 
 
+# ---------------------------------------------------------------------------
+# Event-engine fast path.  _ready_ev/_exec_ev are semantically identical
+# to the legacy _readiness/_execute pair above (same retry values, reason
+# strings, trace records, and state transitions — pinned against each
+# other by tests/test_parity.py) but are restructured for the event
+# scheduler's hot loop: exact-type dispatch instead of isinstance
+# cascades, per-instance port-resolution caches, pre-built wake-event
+# key tuples, and wake-event emission threaded through an explicit list.
+# ---------------------------------------------------------------------------
+
+
+_proc_pos = operator.attrgetter("pos")
+
+
+def _chan_ev(inst: _Inst, c: Channel) -> _ChanState:
+    st = inst.chans.get(c.name)
+    if st is None:
+        st = inst.chans[c.name] = _ChanState()
+    if st.push_key is None:
+        st.push_key = ("push", inst.index, c.name)
+        st.pop_key = ("pop", inst.index, c.name)
+    return st
+
+
+def _port_ev(ctx: _Ctx, inst: _Inst, port: str) -> Tuple:
+    """Cached port resolution: ``(mem, owner, pni_key, issue_key,
+    mem_key, store_key, trace_label)``.  Safe to cache because port
+    bindings are fixed for the lifetime of an engine run."""
+    e = inst.portcache.get(port)
+    if e is None:
+        mem = inst.private.get(port)
+        if mem is not None:
+            owner = inst.name
+        else:
+            mem = ctx.memories.get(port)
+            if mem is None:
+                raise KeyError(
+                    f"program references port {port!r} with no memory "
+                    f"model bound"
+                )
+            owner = ""
+        e = inst.portcache[port] = (
+            mem, owner, (owner, port), ("issue", owner, port),
+            ("mem", id(mem)), ("store", inst.index, port),
+            _port_label(owner, port))
+    return e
+
+
+def _ready_ev(ctx: _Ctx, inst: _Inst, eff: Any, t: float) -> Optional[float]:
+    """Can ``eff`` execute at time t?  ``None`` when ready, else the
+    retry time (INF for state-change-only blockers).
+
+    Unlike the legacy :func:`_readiness` oracle this does not build the
+    blocked-reason string: in the event engine a reason is only ever
+    observed inside a deadlock message, and a deadlock is a global
+    fixpoint — no state can have changed since each process parked — so
+    the messages are derived fresh through the legacy oracle at that
+    point (see ``_deadlock_event``) and are guaranteed identical.
+    """
+    cls = eff.__class__
+    while cls is Fused:
+        eff = eff.first
+        cls = eff.__class__
+    if cls is Resp:
+        fifo = _chan_ev(inst, eff.channel).fifo
+        if not fifo:
+            return INF
+        ready = fifo[0][0]
+        if ready > t:
+            return ready
+        return None
+    if cls is Req:
+        c = eff.channel
+        fifo = _chan_ev(inst, c).fifo
+        if len(fifo) >= c.capacity:
+            front_ready = fifo[0][0] if fifo else INF
+            return front_ready if front_ready > t else INF
+        entry = _port_ev(ctx, inst, c.port)
+        t_issue = ctx.port_next_issue.get(entry[2], 0.0)
+        if t_issue < t:
+            t_issue = t
+        slot = entry[0].free_slot_at(t_issue)
+        if slot > t:
+            return slot
+        return None
+    if cls is Par:
+        # blocked iff any sub is; retry = min finite over blocked subs
+        blocked = False
+        r_min: Optional[float] = None
+        for sub in eff.effects:
+            r = _ready_ev(ctx, inst, sub, t)
+            if r is None:
+                sc = sub.__class__
+                while sc is Fused:
+                    sub = sub.first
+                    sc = sub.__class__
+                if sc is Req or sc is StoreWait:
+                    # a ready Req (or StoreWait) sub inside a blocked
+                    # Par: someone else's issue (store) can later
+                    # mshr-block (write-gate) it, handing the Par a new,
+                    # possibly smaller finite retry — the non-monotone
+                    # park the jump must watch eagerly
+                    ctx.par_ready_req = True
+                continue
+            blocked = True
+            if r is not INF and (r_min is None or r < r_min):
+                r_min = r
+        if not blocked:
+            return None
+        return r_min if r_min is not None else INF
+    if cls is Deq:
+        fifo = _chan_ev(inst, eff.channel).fifo
+        if not fifo:
+            return INF
+        ready = fifo[0][0]
+        if ready > t:
+            return ready
+        return None
+    if cls is Enq:
+        st = _chan_ev(inst, eff.channel)
+        if len(st.fifo) >= eff.channel.capacity:
+            return INF
+        return None
+    if cls is Delay or cls is Store or cls is Halt:
+        return None
+    if cls is StoreWait:
+        done_at = inst.port_last_store.get(eff.port, 0.0)
+        if done_at > t:
+            return done_at
+        return None
+    raise TypeError(f"unknown effect {eff!r}")
+
+
+def _exec_ev(ctx: _Ctx, inst: _Inst, eff: Any, t: float,
+             ev: List[Tuple]) -> Any:
+    """Execute a ready effect at time t, appending the wake-event keys
+    of every state change to ``ev``; returns the value to send."""
+    cls = eff.__class__
+    if cls is Fused:
+        value = _exec_ev(ctx, inst, eff.first, t, ev)
+        follow = eff.then(value)
+        if follow is not None:
+            _exec_ev(ctx, inst, follow, t, ev)
+        return value
+    if cls is Resp:
+        st = _chan_ev(inst, eff.channel)
+        _, value = st.fifo.popleft()
+        st.resps += 1
+        ev.append(st.pop_key)
+        if ctx.trace is not None:
+            ctx.trace.on_occupancy(inst.name, eff.channel.name,
+                                   len(st.fifo))
+        return value
+    if cls is Req:
+        c = eff.channel
+        st = _chan_ev(inst, c)
+        mem, _, pni_key, issue_key, mem_key, _, label = \
+            _port_ev(ctx, inst, c.port)
+        pni = ctx.port_next_issue
+        t_issue = pni.get(pni_key, 0.0)
+        if t_issue < t:
+            t_issue = t
+        t_done, value = mem.access(eff.addr, t_issue)
+        pni[pni_key] = t_issue + 1.0
+        st.fifo.append((t_done, value))
+        st.reqs += 1
+        inst.port_reads[c.port] = inst.port_reads.get(c.port, 0) + 1
+        ev.append(st.push_key)
+        ev.append(issue_key)
+        ev.append(mem_key)
+        if ctx.trace is not None:
+            ctx.trace.on_request(inst.name, c.name, label, t_issue, t_done)
+            ctx.trace.on_occupancy(inst.name, c.name, len(st.fifo))
+        return None
+    if cls is Par:
+        return tuple([_exec_ev(ctx, inst, sub, t, ev)
+                      for sub in eff.effects])
+    if cls is Enq:
+        st = _chan_ev(inst, eff.channel)
+        st.fifo.append((t + 1.0, eff.value))
+        st.enqs += 1
+        ev.append(st.push_key)
+        if ctx.trace is not None:
+            ctx.trace.on_occupancy(inst.name, eff.channel.name,
+                                   len(st.fifo))
+        return None
+    if cls is Deq:
+        st = _chan_ev(inst, eff.channel)
+        _, value = st.fifo.popleft()
+        st.deqs += 1
+        ev.append(st.pop_key)
+        if ctx.trace is not None:
+            ctx.trace.on_occupancy(inst.name, eff.channel.name,
+                                   len(st.fifo))
+        return value
+    if cls is Store:
+        port = eff.port
+        mem, _, pni_key, issue_key, _, store_key, label = \
+            _port_ev(ctx, inst, port)
+        mem.writes += 1
+        pni = ctx.port_next_issue
+        t_issue = pni.get(pni_key, 0.0)
+        if t_issue < t:
+            t_issue = t
+        pni[pni_key] = t_issue + 1.0
+        t_done = t_issue + mem.write_latency()
+        pls = inst.port_last_store
+        prev = pls.get(port, 0.0)
+        if t_done > prev:
+            pls[port] = t_done
+        inst.stores.setdefault(port, {})[eff.addr] = eff.value
+        try:
+            mem.data[eff.addr] = eff.value
+        except (TypeError, IndexError, KeyError):
+            pass
+        ev.append(issue_key)
+        ev.append(store_key)
+        if ctx.trace is not None:
+            ctx.trace.on_store(inst.name, label, t_issue)
+        return None
+    if cls is Delay or cls is Halt or cls is StoreWait:
+        return None
+    raise TypeError(f"unknown effect {eff!r}")
+
+
+def _collect_triggers(ctx: _Ctx, inst: _Inst, eff: Any, wake: set,
+                      dirty: set) -> None:
+    """Wait-set keys for a blocked ``eff``, split by what the event can
+    do to it.
+
+    ``wake`` keys are state changes that could make the effect *ready*
+    (a FIFO push for an empty-blocked consumer, a pop for a full-blocked
+    producer or an in-order head swap) — they re-examine the process
+    immediately, at its polling-scheduler position in the pass.
+
+    ``dirty`` keys can only move the effect's *retry time* (a port issue
+    pushes ``port_next_issue``/the MSHR heap later; a store pushes the
+    write-response edge later) — they never unblock anything, so the
+    re-examination is deferred to the next no-progress pass, where the
+    clock jump needs fresh retries to stay in lockstep with the polling
+    scheduler's freshly computed minimum.
+
+    For a single ``Req``/``StoreWait`` a dirty event can only *increase*
+    the retry, so the jump may validate cached values lazily from the
+    heap minimum upward.  A ``Par`` with a ``Req`` or ``StoreWait`` sub
+    that is *ready* at park time breaks that monotonicity: a port issue
+    (store) can turn the ready sub into an mshr-blocked (write-gated)
+    one, giving the Par a new, possibly much *smaller* finite retry.
+    ``_ready_ev`` flags that case through ``ctx.par_ready_req`` and the
+    scheduler puts such parks on an eager per-jump watch list.  (A sub
+    *blocked* at park time cannot turn ready without a wake event, so
+    its contribution stays monotone.)
+    """
+    cls = eff.__class__
+    if cls is Req:
+        st = _chan_ev(inst, eff.channel)
+        wake.add(st.pop_key)
+        entry = _port_ev(ctx, inst, eff.channel.port)
+        dirty.add(entry[3])
+        dirty.add(entry[4])
+        return
+    if cls is Resp or cls is Deq:
+        st = _chan_ev(inst, eff.channel)
+        wake.add(st.push_key)
+        wake.add(st.pop_key)
+    elif cls is Enq:
+        wake.add(_chan_ev(inst, eff.channel).pop_key)
+    elif cls is StoreWait:
+        dirty.add(_port_ev(ctx, inst, eff.port)[5])
+    elif cls is Par:
+        for sub in eff.effects:
+            _collect_triggers(ctx, inst, sub, wake, dirty)
+    elif cls is Fused:
+        _collect_triggers(ctx, inst, eff.first, wake, dirty)
+    # Delay / Halt / Store are always ready and never park in a wait-set
+
+
+ENGINES = ("event", "polling")
+
+
 class SharedMemoryEngine:
     """Execute N concurrent DAE program instances against one shared
     memory system.
@@ -542,28 +872,75 @@ class SharedMemoryEngine:
     Conservation (§5.1) is checked per instance at termination; a global
     scheduling fixpoint with no runnable process raises
     :class:`DeadlockError` naming every blocked process.
+
+    ``engine`` selects the scheduler implementation: ``"event"`` (the
+    default, event-driven) or ``"polling"`` (the legacy pass-based
+    oracle).  Both produce bit-identical results; see the module
+    docstring.
     """
 
     def __init__(self, instances: Sequence[EngineInstance],
                  shared_memories: Optional[Dict[str, MemoryModel]] = None,
-                 *, tracer: Any = None, max_steps: int = 500_000_000):
+                 *, tracer: Any = None, max_steps: int = 500_000_000,
+                 engine: str = "event"):
         if not instances:
             raise ValueError("SharedMemoryEngine needs at least one instance")
         names = [i.name for i in instances]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate instance names: {names}")
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r} (choose from "
+                             f"{ENGINES})")
         self.instances = list(instances)
         self.shared = dict(shared_memories or {})
         self.tracer = tracer
         self.max_steps = max_steps
+        self.engine = engine
 
     def run(self) -> EngineResult:
         insts = [_Inst(spec.name, i, spec.program, spec.memories)
                  for i, spec in enumerate(self.instances)]
         pairs = [(inst, p) for inst in insts for p in inst.procs]
-        n_inst = len(insts)
         ctx = _Ctx(self.shared, self.tracer)
+        if self.engine == "polling":
+            n_events, passes = self._run_polling(insts, pairs, ctx)
+        else:
+            n_events, passes = self._run_event(insts, pairs, ctx)
+        results = [self._finalize(inst) for inst in insts]
+        makespan = max([r.cycles for r in results] + [0])
+        trace = self.tracer.summary() if self.tracer is not None else None
+        return EngineResult(cycles=makespan, instances=results, trace=trace,
+                            events=n_events, passes=passes)
 
+    def _deadlock_event(self, ctx, live, floor) -> None:
+        """Deadlock from the event scheduler: derive each blocked
+        process's reason fresh through the legacy oracle (a deadlock is
+        a fixpoint, so nothing has changed since each process parked and
+        the strings match the polling scheduler's exactly)."""
+        for inst, p in live:
+            t = p.time
+            _, _, reason = _readiness(ctx, inst, p.effect,
+                                      t if t > floor else floor)
+            p.blocked_on = reason
+        self._deadlock(live)
+
+    def _deadlock(self, live) -> None:
+        n_inst = len(self.instances)
+        if n_inst == 1:
+            blocked = {p.proc.name: p.blocked_on for _, p in live}
+            raise DeadlockError(
+                f"deadlock in program "
+                f"{self.instances[0].program.name!r}: {blocked}")
+        blocked = {f"{inst.name}:{p.proc.name}": p.blocked_on
+                   for inst, p in live}
+        raise DeadlockError(
+            f"deadlock across {n_inst} instances: {blocked}")
+
+    def _run_polling(self, insts, pairs, ctx) -> Tuple[int, int]:
+        """Legacy pass-based scheduler: every pass re-pumps, re-sorts,
+        and re-checks readiness of every live process."""
+        n_inst = len(insts)
+        n_events = 0
         steps = 0
         rotation = 0
         while True:
@@ -600,6 +977,7 @@ class SharedMemoryEngine:
                     p.blocked_on = reason
                     continue
                 p.send = _execute(ctx, inst, eff, t)
+                n_events += 1
                 if isinstance(eff, Delay):
                     p.time = t + max(eff.cycles, 0)
                 else:
@@ -612,24 +990,285 @@ class SharedMemoryEngine:
 
             if not progressed:
                 if best_retry is INF:
-                    if n_inst == 1:
-                        blocked = {p.proc.name: p.blocked_on
-                                   for _, p in live}
-                        raise DeadlockError(
-                            f"deadlock in program "
-                            f"{self.instances[0].program.name!r}: {blocked}")
-                    blocked = {f"{inst.name}:{p.proc.name}": p.blocked_on
-                               for inst, p in live}
-                    raise DeadlockError(
-                        f"deadlock across {n_inst} instances: {blocked}")
+                    self._deadlock(live)
                 for inst, p in pairs:
                     if not p.done and p.time < best_retry:
                         p.time = best_retry
+        return n_events, steps
 
-        results = [self._finalize(inst) for inst in insts]
-        makespan = max([r.cycles for r in results] + [0])
-        trace = self.tracer.summary() if self.tracer is not None else None
-        return EngineResult(cycles=makespan, instances=results, trace=trace)
+    def _run_event(self, insts, pairs, ctx) -> Tuple[int, int]:
+        """Event-driven scheduler, bit-exact with :meth:`_run_polling`.
+
+        Equivalence argument (verified cell-by-cell by
+        ``tests/test_parity.py``):
+
+        * **passes map 1:1** — each iteration of the outer loop below
+          corresponds to one polling pass, so the round-robin rotation
+          index (``pass_no - 1``) agrees with the polling scheduler's
+          per-pass ``rotation`` counter, tie-breaking identically;
+        * **candidate sufficiency** — a blocked process's readiness (and
+          its retry time) can only change when a wait-set trigger from
+          :func:`_collect_triggers` fires or when the no-progress jump
+          reaches its cached retry, so processes outside the pass's
+          candidate heap would re-block exactly as they did last time
+          and are safe to skip;
+        * **in-pass ordering** — candidates pop off a heap keyed
+          ``(local_time, rotated_instance_index, pairs_position)``, the
+          polling scheduler's stable sort key.  A process woken by an
+          event *behind* the current key joins this pass's heap (the
+          polling sweep would reach it later in the same pass); one
+          woken *at or before* the current key waits for the next pass
+          (the sweep already passed it);
+        * **lazy clock floor** — the no-progress jump advances a global
+          ``floor`` instead of rewriting every process's clock;
+          effective time is ``max(local, floor)``, materialized on
+          execution.  The jump target comes from a stamp-invalidated
+          heap of cached retry times, which equals the polling
+          scheduler's fresh minimum because every event that could
+          change a retry also wakes its process for re-examination.
+        """
+        n_inst = len(insts)
+        max_steps = self.max_steps
+        procs: List[_Proc] = []
+        for pos, (inst, p) in enumerate(pairs):
+            p.pos = pos
+            p.inst = inst
+            p.iidx = inst.index
+            procs.append(p)
+        live_count = len(pairs)
+        # wake-sets: state changes that can make a parked proc ready
+        waiters: Dict[Tuple, Dict[_Proc, None]] = {}
+        # port-state version counters: bumped O(1) per issue/store; a
+        # parked proc snapshots the versions its retry was computed
+        # under, and the jump refreshes any proc whose snapshot is stale
+        vers: Dict[Tuple, int] = {}
+        # parked procs whose retry is non-monotone under port events (a
+        # Par with a Req sub — see _collect_triggers): version-checked
+        # eagerly at every jump, because a stale cached retry may be
+        # *larger* than the fresh one and the lazy heap validation below
+        # would then miss the true minimum
+        watch: Dict[_Proc, None] = {}
+        retry_heap: List[Tuple[float, int, int]] = []  # (retry, pos, stamp)
+        # stale entries (superseded stamps) are dropped lazily at jumps;
+        # compact when they pile up so heap ops stay O(log live-entries)
+        compact_at = max(64, 8 * len(pairs))
+        floor = 0.0
+        pass_no = 0
+        n_events = 0
+        to_pump: List[_Proc] = list(procs)
+        next_cand: List[_Proc] = []
+        ev: List[Tuple] = []
+        heappush, heappop = heapq.heappush, heapq.heappop
+
+        def unpark(w: _Proc) -> None:
+            for k in w.waits[0]:
+                d = waiters.get(k)
+                if d is not None:
+                    d.pop(w, None)
+            w.waits = None
+            w.stamp += 1
+            watch.pop(w, None)
+
+        def reblock(p: _Proc, retry: float, eff: Any,
+                    eager: bool) -> None:
+            p.stamp += 1
+            if retry is not INF:
+                heappush(retry_heap, (retry, p.pos, p.stamp))
+                if len(retry_heap) > compact_at:
+                    compact()
+            if p.teff is eff:
+                keys = p.tkeys
+            else:
+                wake_keys: set = set()
+                dirty_keys: set = set()
+                _collect_triggers(ctx, p.inst, eff, wake_keys, dirty_keys)
+                keys = p.tkeys = (wake_keys, tuple(dirty_keys))
+                p.teff = eff
+            p.waits = keys
+            dirty_keys = keys[1]
+            if dirty_keys:
+                p.vsnap = [(k, vers.get(k, 0)) for k in dirty_keys]
+                if eager:
+                    watch[p] = None
+            else:
+                p.vsnap = None
+            for k in keys[0]:
+                ws = waiters.get(k)
+                if ws is None:
+                    ws = waiters[k] = {}
+                ws[p] = None
+
+        def compact() -> None:
+            nonlocal compact_at
+            retry_heap[:] = [e for e in retry_heap
+                             if procs[e[1]].stamp == e[2]]
+            heapq.heapify(retry_heap)
+            compact_at = max(64, 8 * len(pairs), 2 * len(retry_heap))
+
+        def vers_stale(p: _Proc) -> bool:
+            snap = p.vsnap  # [(dirty_key, version)] or None
+            if snap is None:
+                return False
+            for k, v in snap:
+                if vers.get(k, 0) != v:
+                    return True
+            return False
+
+        def refresh(p: _Proc) -> Optional[float]:
+            """Recompute a parked proc's retry in place (issues and
+            stores can only delay a retry, never grant readiness)."""
+            t = p.time
+            ctx.par_ready_req = False
+            retry = _ready_ev(ctx, p.inst, p.effect,
+                              t if t > floor else floor)
+            eager = ctx.par_ready_req
+            p.stamp += 1
+            if retry is None:
+                # cannot happen (issues/stores never grant readiness);
+                # defensively schedule an immediate retry at local time
+                retry = t if t > floor else floor
+            if retry is not INF:
+                heappush(retry_heap, (retry, p.pos, p.stamp))
+            dirty_keys = p.waits[1]
+            if dirty_keys:
+                p.vsnap = [(k, vers.get(k, 0)) for k in dirty_keys]
+                if eager:
+                    watch[p] = None
+                else:
+                    watch.pop(p, None)
+            else:
+                p.vsnap = None
+            return retry
+
+        while live_count > 0:
+            pass_no += 1
+            if pass_no > max_steps:
+                raise RuntimeError("simulation step limit exceeded")
+            rot = pass_no - 1
+
+            heap: List[Tuple[float, int, int]] = []  # (time, rotidx, pos)
+            if to_pump:
+                # generator pump order is pairs order, as in polling
+                if len(to_pump) > 1:
+                    to_pump.sort(key=_proc_pos)
+                for p in to_pump:
+                    try:
+                        p.effect = p.gen.send(p.send)
+                        p.send = None
+                    except StopIteration:
+                        p.done = True
+                        live_count -= 1
+                        continue
+                    t = p.time
+                    heap.append((t if t > floor else floor,
+                                 (p.iidx - rot) % n_inst, p.pos))
+                to_pump = []
+            for p in next_cand:
+                t = p.time
+                heap.append((t if t > floor else floor,
+                             (p.iidx - rot) % n_inst, p.pos))
+            next_cand = []
+            if live_count == 0:
+                break
+            if len(heap) > 1:
+                heapq.heapify(heap)
+
+            progressed = False
+            while heap:
+                key = heappop(heap)
+                t = key[0]
+                p = procs[key[2]]
+                inst = p.inst
+                eff = p.effect
+                ctx.par_ready_req = False
+                retry = _ready_ev(ctx, inst, eff, t)
+                if retry is not None:
+                    reblock(p, retry, eff, ctx.par_ready_req)
+                    continue
+                p.send = _exec_ev(ctx, inst, eff, t, ev)
+                n_events += 1
+                cls = eff.__class__
+                if cls is Delay:
+                    p.time = t + (eff.cycles if eff.cycles > 0 else 0)
+                else:
+                    p.time = t + p.proc.ii
+                if cls is Halt:
+                    p.done = True
+                    live_count -= 1
+                else:
+                    to_pump.append(p)
+                p.effect = None
+                p.blocked_on = None
+                progressed = True
+                if ev:
+                    for k in ev:
+                        kind = k[0]
+                        if kind == "push" or kind == "pop":
+                            ws = waiters.get(k)
+                            if not ws:
+                                continue
+                            for w in list(ws):
+                                unpark(w)
+                                wt = w.time
+                                wkey = (wt if wt > floor else floor,
+                                        (w.iidx - rot) % n_inst, w.pos)
+                                if wkey > key:
+                                    heappush(heap, wkey)
+                                else:
+                                    next_cand.append(w)
+                        else:  # issue / mem / store: O(1) version bump
+                            vers[k] = vers.get(k, 0) + 1
+                    ev.clear()
+
+            if not progressed:
+                # no-progress pass.  A port issue or store can only
+                # *delay* a parked proc's retry, never unblock it, so
+                # retry refreshes were deferred to here, where the clock
+                # jump consumes them: refresh any proc whose port-version
+                # snapshot went stale, lazily, starting from the heap
+                # minimum — fresh retries are >= stale ones, so the first
+                # version-valid minimum is the true fresh minimum.
+                for p in list(watch):
+                    # non-monotone parks first (a Par with a Req sub that
+                    # was ready when it parked): their fresh retry may
+                    # undercut every cached heap entry
+                    if vers_stale(p):
+                        refresh(p)
+                while retry_heap:
+                    r, pos, stamp = retry_heap[0]
+                    p = procs[pos]
+                    if stamp != p.stamp:
+                        heappop(retry_heap)
+                        continue
+                    if vers_stale(p):
+                        heappop(retry_heap)
+                        refresh(p)
+                        continue
+                    break
+                if not retry_heap:
+                    self._deadlock_event(
+                        ctx, [ip for ip in pairs if not ip[1].done], floor)
+                best = retry_heap[0][0]
+                while retry_heap and retry_heap[0][0] == best:
+                    _, pos, stamp = heappop(retry_heap)
+                    p = procs[pos]
+                    if stamp != p.stamp:
+                        continue
+                    if vers_stale(p):
+                        # fresh retry is >= best; requeue — if it still
+                        # lands exactly on the jump the next iteration
+                        # pops it again (now version-valid) and wakes it
+                        refresh(p)
+                        continue
+                    unpark(p)
+                    next_cand.append(p)
+                floor = best
+
+        # p.time is materialized at every execution (and a finishing
+        # StopIteration is discovered on the pass right after its proc's
+        # last execution, before any jump), so _finalize's per-instance
+        # cycle accounting needs no floor catch-up here
+        return n_events, pass_no
 
     def _finalize(self, inst: _Inst) -> SimResult:
         counts: Dict[str, int] = {}
@@ -673,14 +1312,17 @@ def simulate(
     memories: Dict[str, MemoryModel],
     max_steps: int = 500_000_000,
     tracer: Any = None,
+    engine: str = "event",
 ) -> SimResult:
     """Run ``program`` against ``memories`` (one entry per port name).
 
     Single-instance wrapper over :class:`SharedMemoryEngine`; all ports
     are bound as shared (with one tenant there is nobody to share with,
     so the timing is identical to the legacy single-program scheduler).
+    ``engine`` selects the scheduler implementation (``"event"`` or the
+    legacy ``"polling"`` oracle); both are bit-exact.
     """
-    engine = SharedMemoryEngine(
+    eng = SharedMemoryEngine(
         [EngineInstance("", program)], memories,
-        tracer=tracer, max_steps=max_steps)
-    return engine.run().instances[0]
+        tracer=tracer, max_steps=max_steps, engine=engine)
+    return eng.run().instances[0]

@@ -30,6 +30,13 @@ the engine runs more than one program instance (the empty instance name
 of a plain :func:`repro.core.simulator.simulate` call keeps the bare
 name), so multi-tenant traces separate per tenant while shared ports
 aggregate all tenants' traffic under the one physical port name.
+
+Traces are *scheduler-invariant*: the event-driven engine and the
+legacy polling oracle drive these hooks with identical event streams
+(same order, same timestamps), so a :class:`TraceSummary` is comparable
+across engines byte-for-byte — ``tests/test_parity.py`` pins that, and
+``tests/golden/*.json`` pins one summary per workload against
+accidental timing-model drift (refresh via ``pytest --update-golden``).
 """
 
 from __future__ import annotations

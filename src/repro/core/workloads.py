@@ -1061,6 +1061,7 @@ class WorkloadReport:
     overhead: float          # cycles/golden - 1
     correct: bool
     mem_reads: Dict[str, int]
+    trace: Optional[TraceSummary] = None
 
     @property
     def speedup_base(self) -> Optional[float]:
@@ -1104,6 +1105,9 @@ def run_workload(
     max_outstanding: Optional[int] = None,
     seed: int = 0,
     cap_slack: Optional[int] = None,
+    engine: str = "event",
+    trace: bool = False,
+    trace_bin_cycles: int = 64,
 ) -> WorkloadReport:
     """Build and simulate one (benchmark, config) cell of Table 1/3.
 
@@ -1111,12 +1115,26 @@ def run_workload(
     load/stream channels get ``capacity = rif + cap_slack`` instead of
     the legacy per-benchmark defaults.  This is the knob ``repro.tune``
     sweeps; too-small values reproduce the §5.3 deadlocks.
+
+    ``engine`` selects the scheduler implementation (``"event"`` or the
+    legacy ``"polling"`` oracle — bit-exact, see
+    :mod:`repro.core.simulator`).  With ``trace=True`` the report
+    carries a :class:`repro.core.trace.TraceSummary`; multi-phase
+    benchmarks (mergesort, multispmv) accumulate across phases with
+    per-phase clocks restarting at zero.
     """
     if config not in CONFIGS:
         raise ValueError(f"unknown config {config!r}")
     cap = None if cap_slack is None else max(1, rif + cap_slack)
     mem_factory = _mem_factory_for(mem, latency, max_outstanding,
                                    MOMS_PORTS.get(benchmark, ()))
+    tracer = Tracer(trace_bin_cycles) if trace else None
+
+    def _sim(prog, mems):
+        return simulate(prog, mems, tracer=tracer, engine=engine)
+
+    def _summary():
+        return tracer.summary() if tracer is not None else None
 
     if benchmark in ("binsearch", "binsearch_for"):
         data = make_binsearch_data(scale, seed)
@@ -1126,11 +1144,12 @@ def run_workload(
         total = 0
         result = None
         for prog in progs:
-            result = simulate(prog, mems)
+            result = _sim(prog, mems)
             total += result.cycles
         reads = {p: m.reads for p, m in mems.items()}
         return WorkloadReport(benchmark, config, scale, total, golden,
-                              total / golden - 1, check(result), reads)
+                              total / golden - 1, check(result), reads,
+                              _summary())
 
     if benchmark == "hashtable":
         data = make_hashtable_data(scale, seed)
@@ -1139,11 +1158,12 @@ def run_workload(
         total = 0
         result = None
         for prog in progs:
-            result = simulate(prog, mems)
+            result = _sim(prog, mems)
             total += result.cycles
         reads = {p: m.reads for p, m in mems.items()}
         return WorkloadReport(benchmark, config, scale, total, golden,
-                              total / golden - 1, check(result), reads)
+                              total / golden - 1, check(result), reads,
+                              _summary())
 
     if benchmark == "spmv":
         data = make_spmv_data(scale if scale != "paper" else "paper", seed)
@@ -1152,12 +1172,13 @@ def run_workload(
         total = 0
         reads: Dict[str, int] = {}
         for prog, mems in cells:
-            r = simulate(prog, mems)
+            r = _sim(prog, mems)
             total += r.cycles
             for p, m in mems.items():
                 reads[p] = reads.get(p, 0) + m.reads
         return WorkloadReport(benchmark, config, scale, total, golden,
-                              total / golden - 1, check(None), reads)
+                              total / golden - 1, check(None), reads,
+                              _summary())
 
     if benchmark in ("mergesort", "mergesort_opt"):
         data = make_mergesort_data(scale, seed)
@@ -1169,12 +1190,13 @@ def run_workload(
         total = 0
         reads = {}
         for prog, mems in build():
-            r = simulate(prog, mems)
+            r = _sim(prog, mems)
             total += r.cycles
             for p, m in mems.items():
                 reads[p] = reads.get(p, 0) + m.reads
         return WorkloadReport(benchmark, config, scale, total, golden,
-                              total / golden - 1, check(None), reads)
+                              total / golden - 1, check(None), reads,
+                              _summary())
 
     if benchmark == "multispmv":
         data = make_multispmv_data("paper" if scale in ("paper", "fig4") else scale,
@@ -1184,12 +1206,13 @@ def run_workload(
         total = 0
         reads = {}
         for prog, mems in build():
-            r = simulate(prog, mems)
+            r = _sim(prog, mems)
             total += r.cycles
             for p, m in mems.items():
                 reads[p] = reads.get(p, 0) + m.reads
         return WorkloadReport(benchmark, config, scale, total, golden,
-                              total / golden - 1, check(None), reads)
+                              total / golden - 1, check(None), reads,
+                              _summary())
 
     raise ValueError(f"unknown benchmark {benchmark!r}")
 
@@ -1265,8 +1288,9 @@ def _merge_reads(shared: Dict[str, MemoryModel],
     return reads
 
 
-def _multi_run_single_phase(instances, shared, checks, tracer):
-    res = SharedMemoryEngine(instances, shared, tracer=tracer).run()
+def _multi_run_single_phase(instances, shared, checks, tracer, engine):
+    res = SharedMemoryEngine(instances, shared, tracer=tracer,
+                             engine=engine).run()
     correct = all(chk(r) for chk, r in zip(checks, res.instances))
     return res, correct
 
@@ -1285,6 +1309,7 @@ def run_workload_multi(
     cap_slack: Optional[int] = None,
     trace: bool = False,
     trace_bin_cycles: int = 64,
+    engine: str = "event",
 ) -> MultiWorkloadReport:
     """Simulate ``n_instances`` concurrent tenants of one benchmark
     sharing the irregular-data port(s) of a single memory system.
@@ -1302,7 +1327,9 @@ def run_workload_multi(
     request-latency histograms, and shared-port utilization.  For
     multi-pass benchmarks (mergesort) the tracer accumulates across
     passes; pass-local times restart at zero, so port timelines overlay
-    the passes rather than concatenating them.
+    the passes rather than concatenating them.  ``engine`` selects the
+    scheduler implementation (``"event"`` default, ``"polling"`` the
+    bit-exact legacy oracle).
     """
     if config not in CONFIGS:
         raise ValueError(f"unknown config {config!r}")
@@ -1346,7 +1373,7 @@ def run_workload_multi(
             checks.append(check)
             goldens.append(golden)
         res, correct = _multi_run_single_phase(instances, shared, checks,
-                                               tracer)
+                                               tracer, engine)
         return MultiWorkloadReport(
             benchmark, config, scale, n_instances, res.cycles,
             [r.cycles for r in res.instances], sum(goldens), correct,
@@ -1368,7 +1395,7 @@ def run_workload_multi(
             privates.append(private)
             checks.append(lambda _r, chk=check: chk(None))
         res, correct = _multi_run_single_phase(instances, shared, checks,
-                                               tracer)
+                                               tracer, engine)
         return MultiWorkloadReport(
             benchmark, config, scale, n_instances, res.cycles,
             [r.cycles for r in res.instances],
@@ -1407,7 +1434,8 @@ def run_workload_multi(
                                              mem_factory, sp, dp, cap=cap,
                                              base=i * n, mems=shared)
             instances.append(EngineInstance(f"t{i}", prog))
-        res = SharedMemoryEngine(instances, shared, tracer=tracer).run()
+        res = SharedMemoryEngine(instances, shared, tracer=tracer,
+                                 engine=engine).run()
         total += res.cycles
         for i, r in enumerate(res.instances):
             per_inst[i] += r.cycles

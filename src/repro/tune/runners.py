@@ -212,33 +212,41 @@ def kernel_runner(op: str, dims: Optional[Tuple[int, ...]] = None, *,
 
 def workload_runner(benchmark: str, config: str = "rhls_dec", *,
                     scale: str = "small", mem: str = "fixed",
-                    latency: int = 100):
+                    latency: int = 100, engine: str = "event"):
     """Cycle-count measurement of one (benchmark, config) simulator cell.
 
     ``measure`` returns simulated cycles; an incorrect result is scored
     ``inf`` and simulator deadlocks propagate (the searcher penalizes
     them), so capacity settings that violate §5.3 are rejected, not
     crashed on.
+
+    ``engine`` picks the scheduler implementation; the default event
+    engine is bit-exact with the legacy polling oracle, so cached scores
+    stay valid across the engines and the key is only tagged for
+    non-default choices.
     """
     from repro.core.workloads import run_workload
 
     def measure(cfg: Config) -> float:
         rep = run_workload(benchmark, config, scale=scale, mem=mem,
                            latency=latency, rif=cfg["rif"],
-                           cap_slack=cfg.get("cap_slack"))
+                           cap_slack=cfg.get("cap_slack"), engine=engine)
         if not rep.correct:
             return float("inf")
         return float(rep.cycles)
 
-    key = make_key(f"workload:{benchmark}:{config}", (), "int",
-                   "sim", f"sim:{mem}:lat={latency}:scale={scale}")
+    tag = f"sim:{mem}:lat={latency}:scale={scale}"
+    if engine != "event":
+        tag += f":eng={engine}"
+    key = make_key(f"workload:{benchmark}:{config}", (), "int", "sim", tag)
     return measure, key
 
 
 def multi_workload_runner(benchmark: str, config: str = "rhls_dec", *,
                           n_instances: int = 4, scale: str = "small",
                           mem: str = "fixed", latency: int = 100,
-                          max_outstanding: Optional[int] = 64):
+                          max_outstanding: Optional[int] = 64,
+                          engine: str = "event"):
     """Contention-aware cycle measurement: score a config by the makespan
     of ``n_instances`` tenants sharing one memory system.
 
@@ -246,6 +254,10 @@ def multi_workload_runner(benchmark: str, config: str = "rhls_dec", *,
     a RIF sized to cover the full latency from one tenant over-subscribes
     the shared outstanding-request budget once N tenants each carry it —
     so knobs tuned here reflect the §5.4 contention regime directly.
+    With the event-driven scheduler the per-config cost of an N-tenant
+    measurement grows roughly with executed events rather than N x
+    processes x passes, so tuning at realistic tenant counts is cheap
+    (see docs/tuning.md).
     Incorrect results score ``inf``; deadlocks propagate to the searcher's
     deadlock penalty exactly as in :func:`workload_runner`.
     """
@@ -256,12 +268,16 @@ def multi_workload_runner(benchmark: str, config: str = "rhls_dec", *,
                                  scale=scale, mem=mem, latency=latency,
                                  rif=cfg["rif"],
                                  max_outstanding=max_outstanding,
-                                 cap_slack=cfg.get("cap_slack"))
+                                 cap_slack=cfg.get("cap_slack"),
+                                 engine=engine)
         if not rep.correct:
             return float("inf")
         return float(rep.cycles)
 
+    tag = (f"sim:{mem}:lat={latency}:scale={scale}"
+           f":shared_mo={max_outstanding}")
+    if engine != "event":
+        tag += f":eng={engine}"
     key = make_key(f"workload:{benchmark}:{config}", (n_instances,), "int",
-                   "sim", f"sim:{mem}:lat={latency}:scale={scale}"
-                   f":shared_mo={max_outstanding}")
+                   "sim", tag)
     return measure, key

@@ -13,6 +13,18 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import pytest  # noqa: E402
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json trace fixtures from the current "
+             "scheduler instead of comparing against them")
+
+
+@pytest.fixture
+def update_golden(request):
+    return request.config.getoption("--update-golden")
+
+
 @pytest.fixture(autouse=True)
 def _isolated_tune_cache(tmp_path, monkeypatch):
     """Kernel dispatchers consult the persistent tune cache on None

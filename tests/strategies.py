@@ -1,0 +1,218 @@
+"""Randomized DaeProgram generation shared by the differential-parity
+harness (test_parity.py) and the property tests (test_properties.py).
+
+Programs are generated as *specs* — plain dicts of op lists — because a
+DaeProgram holds live generators that a simulation consumes; a spec can
+be instantiated freshly for each engine run of a differential pair.
+
+The generator covers the scheduling-interleaving space: random channel
+topologies (load + stream, shared producer/consumer processes), random
+capacities small enough to block, random initiation intervals, delays,
+stores, store-waits, and two memory ports with random latency and
+outstanding-request budgets.  Composite effects are generated too:
+``Par`` pairs drawn from two distinct channel streams of one process,
+``Par`` of a channel op with a ``StoreWait`` (the non-monotone park
+that once diverged the event scheduler from the polling oracle), and
+``Fused`` response->store combinational paths — on top of the
+workload-grid half of the parity harness, whose paper benchmarks lean
+on fused/parallel effects throughout.
+
+Specs keep per-channel op order (requests before their responses on the
+same process) but interleave channels randomly across processes, so a
+spec may deadlock (a consumer parked before its producer can run) or
+violate §5.1 conservation — both are *valid* differential outcomes: the
+two engines must raise identical errors.
+
+Hypothesis strategies wrapping the same generator are exported when
+hypothesis is installed (``program_specs()``); everything else works
+without it.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Dict, List, Tuple
+
+from repro.core.dae import (DaeProgram, Delay, Deq, Enq, LoadChannel,
+                            Process, Req, Resp, Store, StoreWait,
+                            StreamChannel)
+from repro.core.simulator import (EngineInstance, FixedLatencyMemory,
+                                  Fused, Par)
+
+PORTS = ("mem0", "mem1")
+DATA_WORDS = 64
+
+
+def random_spec(rng: random.Random) -> Dict[str, Any]:
+    """One random program spec: channels, per-process op lists, timing."""
+    n_procs = rng.randint(1, 4)
+    n_chans = rng.randint(1, 4)
+    chans = []
+    for _ in range(n_chans):
+        chans.append({
+            "kind": rng.choice(("load", "stream")),
+            "capacity": rng.randint(1, 5),
+            "port": rng.choice(PORTS),
+            "producer": rng.randrange(n_procs),
+            "consumer": rng.randrange(n_procs),
+            "count": rng.randint(1, 10),
+        })
+
+    # per-process: one op stream per channel role, merged in random order
+    streams: List[List[List[Tuple]]] = [[] for _ in range(n_procs)]
+    for ci, c in enumerate(chans):
+        if c["kind"] == "load":
+            prod = [("req", ci, rng.randrange(DATA_WORDS))
+                    for _ in range(c["count"])]
+            cons = [("resp", ci)] * c["count"]
+        else:
+            prod = [("enq", ci, rng.randrange(1000))
+                    for _ in range(c["count"])]
+            cons = [("deq", ci)] * c["count"]
+        streams[c["producer"]].append(prod)
+        streams[c["consumer"]].append(cons)
+
+    procs = []
+    store_addr = 0
+    for pi in range(n_procs):
+        pending = [list(s) for s in streams[pi] if s]
+        ops: List[Tuple] = []
+        while pending:
+            s = rng.choice(pending)
+            op = s.pop(0)
+            if not s:
+                pending.remove(s)
+            r = rng.random()
+            others = [x for x in pending if x is not s]
+            if r < 0.12 and others:
+                # Par of ops from two distinct streams (per-channel op
+                # order is preserved: each op is its stream's head; two
+                # ops of the SAME stream in one Par would double-pop a
+                # single ready FIFO entry)
+                s2 = rng.choice(others)
+                op2 = s2.pop(0)
+                if not s2:
+                    pending.remove(s2)
+                ops.append(("par", op, op2))
+            elif r < 0.18:
+                # Par with a StoreWait: the write-response edge inside a
+                # parallel slot (the non-monotone eager-watch park)
+                ops.append(("par", op, ("storewait",)))
+            elif r < 0.26 and op[0] in ("resp", "deq"):
+                # Fused combinational path: consume -> store in one slot
+                ops.append(("fused_store", op, store_addr))
+                store_addr += 1
+            else:
+                ops.append(op)
+            r = rng.random()
+            if r < 0.10:
+                ops.append(("delay", rng.randint(0, 3)))
+            elif r < 0.18:
+                ops.append(("store", store_addr))
+                store_addr += 1
+        if ops and rng.random() < 0.3:
+            ops.append(("storewait",))
+        procs.append({"ops": ops, "ii": rng.randint(1, 3)})
+
+    return {
+        "chans": chans,
+        "procs": procs,
+        "latency": rng.choice((3, 17, 100)),
+        "max_outstanding": rng.choice((2, 5, 64)),
+        "n_stores": store_addr,
+    }
+
+
+def build_program(spec: Dict[str, Any], name: str = "rand"
+                  ) -> Tuple[DaeProgram, Dict[str, FixedLatencyMemory]]:
+    """Instantiate a spec as a fresh DaeProgram plus its memory models.
+
+    Call once per simulation — the returned program's generators are
+    consumed by a run.
+    """
+    chan_objs = []
+    for ci, c in enumerate(spec["chans"]):
+        if c["kind"] == "load":
+            chan_objs.append(LoadChannel(f"c{ci}", capacity=c["capacity"],
+                                         port=c["port"]))
+        else:
+            chan_objs.append(StreamChannel(f"c{ci}",
+                                           capacity=c["capacity"]))
+
+    def effect_of(op, last):
+        kind = op[0]
+        if kind == "req":
+            return Req(chan_objs[op[1]], op[2])
+        if kind == "resp":
+            return Resp(chan_objs[op[1]])
+        if kind == "enq":
+            return Enq(chan_objs[op[1]], op[2])
+        if kind == "deq":
+            return Deq(chan_objs[op[1]])
+        if kind == "delay":
+            return Delay(op[1])
+        if kind == "store":
+            return Store("out", op[1], last)
+        assert kind == "storewait", op
+        return StoreWait("out")
+
+    def make_gen(ops):
+        def gen():
+            last = 0
+            for op in ops:
+                kind = op[0]
+                if kind == "par":
+                    vals = yield Par([effect_of(sub, last)
+                                      for sub in op[1:]])
+                    for v in vals:
+                        if v is not None:
+                            last = v
+                elif kind == "fused_store":
+                    addr = op[2]
+                    last = yield Fused(effect_of(op[1], last),
+                                       lambda v, a=addr: Store("out", a, v))
+                elif kind in ("resp", "deq"):
+                    last = yield effect_of(op, last)
+                else:
+                    yield effect_of(op, last)
+        return gen()
+
+    procs = [Process(f"p{pi}", make_gen(p["ops"]), ii=p["ii"])
+             for pi, p in enumerate(spec["procs"])]
+    lat, mo = spec["latency"], spec["max_outstanding"]
+    mems = {
+        "mem0": FixedLatencyMemory(list(range(DATA_WORDS)), lat,
+                                   max_outstanding=mo),
+        "mem1": FixedLatencyMemory(list(range(100, 100 + DATA_WORDS)), lat,
+                                   max_outstanding=mo),
+        "out": FixedLatencyMemory([None] * max(1, spec["n_stores"]), lat),
+    }
+    return DaeProgram(name, procs), mems
+
+
+def build_engine_inputs(spec: Dict[str, Any], n_instances: int
+                        ) -> Tuple[List[EngineInstance],
+                                   Dict[str, FixedLatencyMemory]]:
+    """N instances of one spec contending for a shared ``mem0`` port;
+    ``mem1`` and ``out`` stay private per tenant."""
+    lat, mo = spec["latency"], spec["max_outstanding"]
+    shared = {"mem0": FixedLatencyMemory(list(range(DATA_WORDS)), lat,
+                                         max_outstanding=mo)}
+    instances = []
+    for i in range(n_instances):
+        prog, mems = build_program(spec, name=f"rand{i}")
+        private = {p: m for p, m in mems.items() if p != "mem0"}
+        instances.append(EngineInstance(f"t{i}", prog, private))
+    return instances, shared
+
+
+try:  # optional hypothesis strategies over the same generator
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised via importorskip
+    st = None
+
+if st is not None:
+    def program_specs():
+        """Hypothesis strategy: a random program spec (shrinks by seed)."""
+        return st.integers(min_value=0, max_value=2**31 - 1).map(
+            lambda seed: random_spec(random.Random(seed)))

@@ -12,6 +12,8 @@ from repro.configs import ARCHS, get_config
 from repro.models.registry import build_model
 from repro.models.transformer import param_count
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -7,6 +7,11 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
+# subprocess-spawning multi-device run, same tier as test_distributed
+pytestmark = pytest.mark.slow
+
 ROOT = Path(__file__).resolve().parents[1]
 
 

@@ -1,0 +1,51 @@
+"""Golden-trace regression fixtures.
+
+One serialized :class:`repro.core.trace.TraceSummary` per workload lives
+under ``tests/golden/``; the scheduler must reproduce each one exactly.
+Cycle counts alone would miss a scheduler refactor that preserves the
+makespan but silently shifts request-latency histograms, channel
+occupancy, or port-utilization timelines — precisely the quantities the
+trace subsystem exists to expose — so the whole summary is pinned.
+
+Refresh after an *intentional* timing-model change with:
+
+    python -m pytest tests/test_golden_traces.py --update-golden
+
+and review the diff like any other golden change.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core.workloads import BENCHMARKS, run_workload
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+# fixed generation parameters: small scale keeps fixtures a few KiB
+GOLDEN_PARAMS = dict(config="rhls_dec", scale="small", latency=100, rif=8,
+                     trace=True, trace_bin_cycles=64)
+
+
+def _summary_for(benchmark: str) -> dict:
+    report = run_workload(benchmark, **GOLDEN_PARAMS)
+    assert report.correct, f"{benchmark} produced wrong results"
+    return report.trace.to_json()
+
+
+@pytest.mark.parametrize("benchmark", BENCHMARKS)
+def test_golden_trace(benchmark, update_golden):
+    path = GOLDEN_DIR / f"{benchmark}.json"
+    got = _summary_for(benchmark)
+    if update_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+        return
+    assert path.exists(), (
+        f"missing golden fixture {path.name}; generate it with "
+        f"`python -m pytest tests/test_golden_traces.py --update-golden`")
+    want = json.loads(path.read_text())
+    assert got == want, (
+        f"{benchmark}: trace summary drifted from {path.name} — if the "
+        f"timing model changed intentionally, refresh with --update-golden")

@@ -1,0 +1,279 @@
+"""Differential parity: the event-driven scheduler vs the polling oracle.
+
+The event engine (``engine="event"``, the default) must be *bit-exact*
+with the legacy pass-based scheduler (``engine="polling"``, kept
+verbatim as the differential oracle): same cycle counts, same stored
+arrays, same per-instance accounting, same trace summaries, and the
+same deadlock messages.  Three layers of evidence:
+
+  * **workload grid** — every paper benchmark × memory model × a grid
+    of (rif, cap_slack, instances) cells runs on both engines and every
+    observable field is compared (the exhaustive config × benchmark
+    matrix is in the ``slow`` tier);
+  * **deadlock parity** — §5.3 capacity violations and the R-HLS-Stream
+    mergesort deadlock must produce identical error messages;
+  * **randomized programs** — seeds drive ``tests/strategies.py`` specs
+    through both engines, single- and multi-instance, comparing results
+    or exceptions; with hypothesis installed the same generator runs
+    under ``@given`` with shrinking.
+"""
+
+import json
+import random
+
+import pytest
+
+from repro.core.dae import ConservationError
+from repro.core.simulator import (DeadlockError, SharedMemoryEngine,
+                                  simulate)
+from repro.core.trace import Tracer
+from repro.core.workloads import (BENCHMARKS, CONFIGS, MULTI_BENCHMARKS,
+                                  run_workload, run_workload_multi)
+
+import strategies
+
+SMALL = dict(scale="small", latency=100)
+
+
+# ---------------------------------------------------------------------------
+# Workload grid
+# ---------------------------------------------------------------------------
+
+# (rif, cap_slack) cells: legacy sizing, tuner-tight sizing, tuner-roomy
+PARAM_CELLS = ((8, None), (4, 1))
+
+SINGLE_GRID = [
+    (bench, "rhls_dec", mem, rif, cap)
+    for bench in BENCHMARKS
+    for mem in ("fixed", "moms")
+    for rif, cap in PARAM_CELLS
+] + [
+    ("hashtable", "vitis", "fixed", 8, None),
+    ("spmv", "rhls", "fixed", 8, None),
+    ("mergesort_opt", "vitis_dec", "fixed", 8, None),
+    ("binsearch", "rhls_stream", "fixed", 8, None),
+    ("multispmv", "vitis_dec", "moms", 4, 1),
+]
+
+
+def _single_pair(bench, config, mem, rif, cap_slack):
+    reps = {}
+    for engine in ("polling", "event"):
+        reps[engine] = run_workload(bench, config, mem=mem, rif=rif,
+                                    cap_slack=cap_slack, trace=True,
+                                    engine=engine, **SMALL)
+    return reps["polling"], reps["event"]
+
+
+@pytest.mark.parametrize("bench,config,mem,rif,cap", SINGLE_GRID)
+def test_single_instance_parity(bench, config, mem, rif, cap):
+    if config == "rhls_stream" and bench.startswith("mergesort"):
+        pytest.skip("structural deadlock cell, covered by deadlock parity")
+    poll, event = _single_pair(bench, config, mem, rif, cap)
+    assert event.cycles == poll.cycles
+    assert event.mem_reads == poll.mem_reads
+    assert event.correct == poll.correct
+    assert event.golden == poll.golden
+    assert event.trace.to_json() == poll.trace.to_json()
+
+
+MULTI_GRID = [
+    (bench, "rhls_dec", mem, n)
+    for bench in MULTI_BENCHMARKS
+    for mem, n in (("fixed", 2), ("moms", 3))
+]
+
+
+@pytest.mark.parametrize("bench,config,mem,n", MULTI_GRID)
+def test_multi_instance_parity(bench, config, mem, n):
+    reps = {}
+    for engine in ("polling", "event"):
+        reps[engine] = run_workload_multi(
+            bench, config, n, mem=mem, rif=8, max_outstanding=64,
+            trace=True, engine=engine, **SMALL)
+    poll, event = reps["polling"], reps["event"]
+    assert event.cycles == poll.cycles
+    assert event.per_instance_cycles == poll.per_instance_cycles
+    assert event.mem_reads == poll.mem_reads
+    assert event.correct == poll.correct
+    # byte-identical trace summaries through the JSON round trip
+    assert json.dumps(event.trace.to_json(), sort_keys=True) == \
+        json.dumps(poll.trace.to_json(), sort_keys=True)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("bench", BENCHMARKS)
+@pytest.mark.parametrize("config", CONFIGS)
+def test_single_instance_parity_full_matrix(bench, config):
+    """Exhaustive benchmark × config sweep (slow tier)."""
+    if config == "rhls_stream" and bench.startswith("mergesort"):
+        with pytest.raises(DeadlockError):
+            run_workload(bench, config, engine="polling", **SMALL)
+        with pytest.raises(DeadlockError):
+            run_workload(bench, config, engine="event", **SMALL)
+        return
+    poll, event = _single_pair(bench, config, "fixed", 8, None)
+    assert event.cycles == poll.cycles
+    assert event.mem_reads == poll.mem_reads
+    assert event.correct == poll.correct
+    assert event.trace.to_json() == poll.trace.to_json()
+
+
+@pytest.mark.scale
+@pytest.mark.parametrize("n", [16, 64])
+def test_multi_instance_parity_large_n(n):
+    """The N-tenant sweep cells the event engine exists for."""
+    reps = {}
+    for engine in ("polling", "event"):
+        reps[engine] = run_workload_multi(
+            "hashtable", "rhls_dec", n, rif=32, max_outstanding=64,
+            engine=engine, **SMALL)
+    assert reps["event"].cycles == reps["polling"].cycles
+    assert reps["event"].per_instance_cycles == \
+        reps["polling"].per_instance_cycles
+
+
+# ---------------------------------------------------------------------------
+# Deadlock parity
+# ---------------------------------------------------------------------------
+
+
+def _error_of(fn):
+    try:
+        fn()
+    except (DeadlockError, ConservationError) as e:
+        return type(e).__name__, str(e)
+    return None
+
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_capacity_violation_deadlock_message_parity(n):
+    """§5.3: capacity < RIF deadlocks identically, message included."""
+    errs = {}
+    for engine in ("polling", "event"):
+        errs[engine] = _error_of(lambda: run_workload_multi(
+            "hashtable", "rhls_dec", n, rif=8, cap_slack=-4,
+            engine=engine, **SMALL))
+    assert errs["event"] is not None
+    assert errs["event"][0] == "DeadlockError"
+    assert errs["event"] == errs["polling"]
+
+
+def test_single_program_deadlock_message_parity():
+    errs = {}
+    for engine in ("polling", "event"):
+        errs[engine] = _error_of(lambda: run_workload(
+            "binsearch", "rhls_dec", rif=8, cap_slack=-6,
+            engine=engine, **SMALL))
+    assert errs["event"] is not None
+    assert errs["event"] == errs["polling"]
+
+
+def test_par_with_ready_storewait_sub_parity():
+    """Regression: a Par whose StoreWait sub is *ready* at park time is
+    a non-monotone park — another process's Store later write-gates it,
+    handing the Par a new finite retry the clock jump must see.  The
+    event engine once missed this (it eagerly watched only ready Req
+    subs), desynchronizing jump targets and deadlock messages."""
+    from repro.core.dae import (DaeProgram, Delay, Enq, Process, Store,
+                                StoreWait, StreamChannel)
+    from repro.core.simulator import FixedLatencyMemory, Par
+
+    def build():
+        c = StreamChannel("c", capacity=1)
+
+        def p1():
+            yield Enq(c, 1)                           # fills the stream
+            yield Par([Enq(c, 2), StoreWait("out")])  # Enq full; SW ready
+
+        def p2():
+            yield Delay(2)
+            yield Store("out", 0, 7)
+
+        prog = DaeProgram("t", [Process("p1", p1()), Process("p2", p2())])
+        mems = {"mem": FixedLatencyMemory(list(range(4)), 10),
+                "out": FixedLatencyMemory([None] * 4, 10)}
+        return prog, mems
+
+    errs = {}
+    for engine in ("polling", "event"):
+        prog, mems = build()
+        errs[engine] = _error_of(lambda: simulate(prog, mems,
+                                                  engine=engine))
+    assert errs["event"] is not None
+    assert errs["event"][0] == "DeadlockError"
+    assert errs["event"] == errs["polling"]
+
+
+# ---------------------------------------------------------------------------
+# Randomized program parity (no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+
+def _outcome_single(spec, engine):
+    prog, mems = strategies.build_program(spec)
+    tracer = Tracer(bin_cycles=32)
+    try:
+        r = simulate(prog, mems, tracer=tracer, engine=engine)
+    except (DeadlockError, ConservationError) as e:
+        return type(e).__name__, str(e)
+    return (r.cycles, r.stores, r.counts, r.mem_reads,
+            json.dumps(tracer.summary().to_json(), sort_keys=True))
+
+
+def _outcome_multi(spec, n, engine):
+    instances, shared = strategies.build_engine_inputs(spec, n)
+    tracer = Tracer(bin_cycles=32)
+    try:
+        res = SharedMemoryEngine(instances, shared, tracer=tracer,
+                                 engine=engine).run()
+    except (DeadlockError, ConservationError) as e:
+        return type(e).__name__, str(e)
+    return (res.cycles, res.events, res.passes,
+            [(r.cycles, r.stores, r.counts, r.mem_reads)
+             for r in res.instances],
+            json.dumps(tracer.summary().to_json(), sort_keys=True))
+
+
+@pytest.mark.parametrize("seed", range(50))
+def test_random_program_parity(seed):
+    spec = strategies.random_spec(random.Random(seed))
+    assert _outcome_single(spec, "event") == _outcome_single(spec, "polling")
+
+
+@pytest.mark.parametrize("seed", range(50, 70))
+@pytest.mark.parametrize("n", [2, 3])
+def test_random_program_parity_multi(seed, n):
+    spec = strategies.random_spec(random.Random(seed))
+    assert _outcome_multi(spec, n, "event") == \
+        _outcome_multi(spec, n, "polling")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(70, 400))
+def test_random_program_parity_deep(seed):
+    spec = strategies.random_spec(random.Random(seed))
+    assert _outcome_single(spec, "event") == _outcome_single(spec, "polling")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-driven parity (shrinks failing specs to minimal programs);
+# guarded import so the seed-grid parity above still runs without the
+# optional 'test' extra
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given
+except ImportError:
+    given = None
+
+if given is not None:
+    @given(spec=strategies.program_specs())
+    def test_random_program_parity_hypothesis(spec):
+        assert _outcome_single(spec, "event") == \
+            _outcome_single(spec, "polling")
+
+    @given(spec=strategies.program_specs())
+    def test_random_program_parity_multi_hypothesis(spec):
+        assert _outcome_multi(spec, 2, "event") == \
+            _outcome_multi(spec, 2, "polling")

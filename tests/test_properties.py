@@ -10,7 +10,9 @@ from hypothesis import given, strategies as st  # noqa: E402
 
 from repro.core.dae import (ConservationError, DaeProgram, Deq, Enq,
                             LoadChannel, Process, Req, Resp, StreamChannel)
-from repro.core.simulator import FixedLatencyMemory, simulate
+from repro.core.simulator import DeadlockError, FixedLatencyMemory, simulate
+
+import strategies
 
 
 # -- stream semantics: order preserved, conservation enforced ----------------
@@ -59,6 +61,37 @@ def test_request_response_conservation(n_req, n_missing, cap):
         except ConservationError:
             raised = True
         assert raised
+
+
+# -- randomized DAE programs (shared generator with test_parity) --------------
+
+
+@given(spec=strategies.program_specs())
+def test_random_program_conservation(spec):
+    """Any generated program either deadlocks (detected, never hangs) or
+    completes with exact per-channel request/response conservation."""
+    prog, mems = strategies.build_program(spec)
+    try:
+        r = simulate(prog, mems)
+    except DeadlockError:
+        return
+    for ci, chan in enumerate(spec["chans"]):
+        assert r.counts.get(f"c{ci}", 0) == chan["count"]
+
+
+@given(spec=strategies.program_specs())
+def test_random_program_latency_floor(spec):
+    """Completion can never beat the issue/compute critical path: at
+    least one cycle per executed effect divided across processes."""
+    prog, mems = strategies.build_program(spec)
+    try:
+        r = simulate(prog, mems)
+    except DeadlockError:
+        return
+    total_ops = sum(len(p["ops"]) for p in spec["procs"])
+    if total_ops:
+        n_procs = len(spec["procs"])
+        assert r.cycles >= total_ops // n_procs // 2
 
 
 # -- decoupled == coupled: latency never changes values -----------------------
