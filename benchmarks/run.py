@@ -13,6 +13,10 @@
     engine-bench      event vs polling scheduler events/sec on the
                       N-tenant hashtable cell (--smoke gates the event
                       engine at >=5x on the contended N=96 cell)
+    serve-bench       decoupled Access/Execute serving pipeline vs the
+                      coupled legacy loop: batch_slots x prompt mixes x
+                      archetypes, tokens/s + TTFT + channel occupancy
+                      (--smoke gates >=5x on the mixed slots=8 cell)
 
 Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 tune scale ...]
 """
@@ -66,6 +70,9 @@ def main() -> None:
     if on("engine-bench"):
         from benchmarks import engine_bench
         engine_bench.run(_csv, smoke="--smoke" in flags)
+    if on("serve-bench"):
+        from benchmarks import serve_bench
+        serve_bench.run(_csv, smoke="--smoke" in flags)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,160 @@
+"""Serving benchmark: decoupled Access/Execute pipeline vs the coupled
+legacy loop.
+
+Sweeps batch_slots x prompt-length mixes x model archetypes (dense,
+moe, rwkv, hymba hybrid) on CPU/interpret and reports, per cell:
+
+  * ``tok_s``     — generated tokens per second of the decoupled loop;
+  * ``legacy``    — the same workload through the coupled loop (which
+                    prefills one token per full-batch step);
+  * ``speedup``   — tok_s over legacy;
+  * ``ttft_ms``   — mean / p95 time-to-first-token of the decoupled
+                    loop (the latency the chunked interleave protects);
+  * ``occ``       — mean/max occupancy of the serve channels (admit,
+                    prefill_done, free_slots) from the trace subsystem.
+
+A parity cell per arch (one slot, one request — the only regime where
+the legacy loop computes correct logits) asserts the two loops'
+greedy outputs are bit-identical, and the slots=8 mixed cell gates the
+decoupled loop at >= 5x legacy tokens/s (the ISSUE 4 acceptance bar).
+``--smoke`` shrinks the sweep to the dense arch so CI exercises the
+gate on every push in seconds.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+MIXES = {
+    "short": (6, 6),       # uniform short prompts
+    "long": (40, 48),      # uniform long prompts
+    "mixed": (4, 48),      # alternating short/long — the stall workload
+}
+ARCHS = ("qwen3-4b", "granite-moe-3b-a800m", "rwkv6-1.6b", "hymba-1.5b")
+SLOTS = (2, 8)
+SMOKE_ARCHS = ("qwen3-4b",)
+SMOKE_SLOTS = (8,)
+SMOKE_MIXES = ("mixed",)
+GATE_SPEEDUP = 5.0         # slots=8 mixed cell: decoupled >= 5x legacy
+MAX_NEW = 16
+N_REQUESTS = 12
+CHUNK = 16
+
+
+def _prompts(mix: str, n: int, vocab: int, seed: int = 0):
+    lo, hi = MIXES[mix]
+    rng = np.random.default_rng(seed)
+    lens = [lo if i % 2 == 0 else hi for i in range(n)]
+    return [rng.integers(0, vocab, size=p) for p in lens]
+
+
+def _requests(mix: str, vocab: int):
+    from repro.runtime.serve_loop import Request
+    return [Request(rid=i, prompt=p, max_new=MAX_NEW)
+            for i, p in enumerate(_prompts(mix, N_REQUESTS, vocab))]
+
+
+def _occ_summary(trace) -> str:
+    occ = trace.channel_occupancy()
+    return ",".join(f"{name.rsplit('/', 1)[-1]}:{mean:.1f}/{mx}"
+                    for name, (mean, mx) in sorted(occ.items()))
+
+
+def _bench_cell(cfg, bundle, params, mix, slots, s_max):
+    from repro.core.trace import Tracer
+    from repro.runtime.serve_loop import LegacyServeLoop, Request, ServeLoop
+
+    def warm():
+        return [Request(rid=-1, prompt=np.array([1, 2], np.int64),
+                        max_new=2)]
+
+    # compile on a throwaway loop (the jit caches are shared per bundle
+    # function), then measure a FRESH loop so the tracer and stats see
+    # only workload traffic
+    ServeLoop(cfg, bundle, params, batch_slots=slots, s_max=s_max,
+              chunk=CHUNK).run(warm())
+    tracer = Tracer()
+    loop = ServeLoop(cfg, bundle, params, batch_slots=slots, s_max=s_max,
+                     chunk=CHUNK, tracer=tracer)
+    reqs = _requests(mix, cfg.vocab)
+    t0 = time.perf_counter()
+    results = loop.run(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in results.values())
+    ttft = sorted(loop.stats.ttft[r.rid] for r in reqs)
+    ttft_mean = 1e3 * sum(ttft) / len(ttft)
+    ttft_p95 = 1e3 * ttft[min(len(ttft) - 1, int(0.95 * len(ttft)))]
+
+    LegacyServeLoop(cfg, bundle, params, batch_slots=slots,
+                    s_max=s_max).run(warm())
+    legacy = LegacyServeLoop(cfg, bundle, params, batch_slots=slots,
+                             s_max=s_max)
+    reqs_l = _requests(mix, cfg.vocab)
+    t0 = time.perf_counter()
+    results_l = legacy.run(reqs_l)
+    dt_l = time.perf_counter() - t0
+    toks_l = sum(len(v) for v in results_l.values())
+
+    return {
+        "tok_s": toks / dt,
+        "legacy_tok_s": toks_l / dt_l,
+        "speedup": (toks / dt) / (toks_l / dt_l),
+        "ttft_mean_ms": ttft_mean,
+        "ttft_p95_ms": ttft_p95,
+        "occ": _occ_summary(tracer.summary()),
+    }
+
+
+def _parity_cell(cfg, bundle, params, s_max) -> None:
+    """One slot, one request: legacy is correct here, so greedy outputs
+    must be bit-identical between the loops."""
+    from repro.runtime.serve_loop import LegacyServeLoop, Request, ServeLoop
+
+    prompt = np.asarray(_prompts("mixed", 2, cfg.vocab, seed=7)[1])
+    new = ServeLoop(cfg, bundle, params, batch_slots=1, s_max=s_max,
+                    chunk=CHUNK)
+    out_new = new.run([Request(rid=0, prompt=prompt, max_new=8)])[0]
+    leg = LegacyServeLoop(cfg, bundle, params, batch_slots=1, s_max=s_max)
+    out_leg = leg.run([Request(rid=0, prompt=prompt, max_new=8)])[0]
+    if out_new != out_leg:  # must fire even under python -O
+        raise AssertionError(
+            f"{cfg.arch}: decoupled {out_new} != legacy {out_leg}")
+
+
+def run(csv_print, smoke: bool = False) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    archs = SMOKE_ARCHS if smoke else ARCHS
+    slots_sweep = SMOKE_SLOTS if smoke else SLOTS
+    mixes = SMOKE_MIXES if smoke else tuple(MIXES)
+    s_max = max(hi for _, hi in MIXES.values()) + MAX_NEW + 8
+
+    results = {}
+    for arch in archs:
+        cfg = get_config(arch, smoke=True)
+        bundle = build_model(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        _parity_cell(cfg, bundle, params, s_max)
+        for mix in mixes:
+            for slots in slots_sweep:
+                cell = _bench_cell(cfg, bundle, params, mix, slots, s_max)
+                results[(arch, mix, slots)] = cell
+                csv_print(
+                    f"serve/{arch}/{mix}/s{slots},{1e6 / cell['tok_s']:.1f},"
+                    f"tok_s={cell['tok_s']:.1f};"
+                    f"legacy={cell['legacy_tok_s']:.1f};"
+                    f"speedup={cell['speedup']:.2f};"
+                    f"ttft_ms={cell['ttft_mean_ms']:.0f}/"
+                    f"{cell['ttft_p95_ms']:.0f};"
+                    f"occ={cell['occ']}")
+                if mix == "mixed" and slots == 8 and \
+                        cell["speedup"] < GATE_SPEEDUP:
+                    raise AssertionError(
+                        f"{arch} mixed/s8: decoupled speedup "
+                        f"{cell['speedup']:.2f}x < {GATE_SPEEDUP}x gate")
+    return results

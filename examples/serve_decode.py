@@ -1,6 +1,10 @@
-"""Serving driver: batched decode with continuous batching.
+"""Serving driver: decoupled Access/Execute continuous batching.
 
 Run: PYTHONPATH=src python examples/serve_decode.py --requests 6 --slots 2
+
+``--legacy`` runs the coupled pre-rewrite loop instead (one prompt
+token per full-batch step) for an on-machine comparison; see
+docs/serving.md and benchmarks/serve_bench.py.
 """
 
 import argparse
@@ -10,8 +14,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.trace import Tracer
 from repro.models.registry import build_model
-from repro.runtime.serve_loop import Request, ServeLoop
+from repro.runtime.serve_loop import LegacyServeLoop, Request, ServeLoop
 
 
 def main() -> None:
@@ -20,12 +25,15 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill tokens per Access-engine step")
+    ap.add_argument("--legacy", action="store_true",
+                    help="run the coupled legacy loop instead")
     ns = ap.parse_args()
 
     cfg = get_config(ns.arch, smoke=True)
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
-    loop = ServeLoop(cfg, m, params, batch_slots=ns.slots, s_max=128)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -33,13 +41,31 @@ def main() -> None:
                     max_new=ns.max_new)
             for i in range(ns.requests)]
     t0 = time.time()
-    results = loop.run(reqs)
+    if ns.legacy:
+        loop = LegacyServeLoop(cfg, m, params, batch_slots=ns.slots,
+                               s_max=128)
+        results = loop.run(reqs)
+    else:
+        tracer = Tracer()
+        loop = ServeLoop(cfg, m, params, batch_slots=ns.slots, s_max=128,
+                         chunk=ns.chunk, tracer=tracer)
+        results = loop.run(reqs)
     dt = time.time() - t0
     total_toks = sum(len(v) for v in results.values())
     print(f"served {len(results)} requests, {total_toks} tokens "
           f"in {dt:.1f}s on {ns.slots} slots")
     for rid in sorted(results):
         print(f"  req {rid}: {results[rid]}")
+    if not ns.legacy:
+        s = loop.stats
+        ttft = sorted(s.ttft.values())
+        print(f"steps: {s.prefill_steps} prefill ({s.prefill_tokens} tok), "
+              f"{s.decode_steps} decode ({s.decode_tokens} tok); "
+              f"ttft p50 {1e3 * ttft[len(ttft) // 2]:.0f}ms")
+        occ = tracer.summary().channel_occupancy()
+        print("channel occupancy (mean/max): "
+              + ", ".join(f"{k.split('/')[-1]}={v[0]:.1f}/{v[1]}"
+                          for k, v in sorted(occ.items())))
     assert len(results) == ns.requests
 
 

@@ -18,8 +18,8 @@ from typing import Optional
 
 import jax
 
-__all__ = ["cdiv", "round_up", "resolve_interpret", "tuned_knobs",
-           "MXU_LANE", "VMEM_BYTES"]
+__all__ = ["cdiv", "round_up", "env_flag", "resolve_interpret",
+           "tuned_knobs", "MXU_LANE", "VMEM_BYTES"]
 
 # TPU v5e hardware shape constants (see benchmarks/hw.py for the full set)
 MXU_LANE = 128          # lane dimension granularity
@@ -35,11 +35,22 @@ def round_up(a: int, b: int) -> int:
     return cdiv(a, b) * b
 
 
+def env_flag(name: str) -> Optional[bool]:
+    """Parse a boolean environment variable: unset -> None; empty, "0",
+    "false", "no", "off" (any case) -> False; anything else -> True."""
+    raw = os.environ.get(name)
+    if raw is None:
+        return None
+    return raw.strip().lower() not in ("", "0", "false", "no", "off")
+
+
 def resolve_interpret(interpret: Optional[bool]) -> bool:
-    """Explicit flag wins; else interpret everywhere except real TPU."""
+    """Explicit flag wins; else $REPRO_FORCE_INTERPRET (truthy values
+    only — "0"/"false"/empty read as unset); else interpret everywhere
+    except real TPU."""
     if interpret is not None:
         return interpret
-    if os.environ.get("REPRO_FORCE_INTERPRET"):
+    if env_flag("REPRO_FORCE_INTERPRET"):
         return True
     return jax.default_backend() != "tpu"
 

@@ -159,6 +159,29 @@ def attention_banded(q, k, v, *, window: int, causal: bool = True,
     return out.reshape(b, h, sq, d).astype(q.dtype)
 
 
+def decode_chunk_ref(q, k_cache, v_cache, lengths, *,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Multi-query decode against a KV cache: the chunked-prefill oracle.
+
+    q (B,H,C,D) — C new queries per batch row; caches (B,KVH,S,D);
+    lengths (B,C) — per-query visible prefix (query i of row b attends
+    cache positions < lengths[b, i]).
+
+    Deliberately a sequential ``lax.map`` of :func:`decode_ref` over the
+    C queries rather than one (C, S) GEMM: XLA's accumulation order
+    depends on the GEMM shape, and the serving parity tests pin chunked
+    prefill BIT-IDENTICAL to a run of single-token decode steps.  FLOPs
+    are identical either way; only the K/V re-reads differ, which the
+    ref oracle does not model.
+    """
+    import jax
+
+    out = jax.lax.map(
+        lambda ql: decode_ref(ql[0], k_cache, v_cache, ql[1], scale=scale),
+        (q.transpose(2, 0, 1, 3), lengths.T))                  # (C,B,H,D)
+    return out.transpose(1, 2, 0, 3)                           # (B,H,C,D)
+
+
 def decode_ref(q, k_cache, v_cache, lengths, *,
                scale: Optional[float] = None) -> jnp.ndarray:
     """q (B,H,D); caches (B,KVH,S,D); lengths (B,) valid prefix lengths."""

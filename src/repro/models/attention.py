@@ -23,7 +23,8 @@ from repro.models.common import (ModelConfig, dense_init, rmsnorm,
 from repro.kernels.flash_attention.ops import flash_attention, flash_decode
 from repro.kernels.flash_attention.ref import (attention_banded,
                                                attention_chunked,
-                                               attention_ref, decode_ref)
+                                               attention_ref,
+                                               decode_chunk_ref, decode_ref)
 
 
 def _prefill_attention(cfg: ModelConfig, q, k, v, *, causal, window):
@@ -92,11 +93,19 @@ def _project_qkv(cfg: ModelConfig, p, x, positions):
 
 def gqa_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
               window: Optional[int] = None,
-              cache: Optional[Dict[str, Any]] = None
+              cache: Optional[Dict[str, Any]] = None,
+              valid: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
     """Prefill path when cache is None; decode path updates the cache.
 
     cache = {"k": (B,KVH,Smax,hd), "v": ..., "len": (B,) int32}
+
+    With a cache and S > 1 (or an explicit ``valid`` (B, S) mask) this is
+    the *chunked cache-fill* path: the S new tokens of each batch row are
+    scattered at its ``cache["len"]``-onward positions, query i attends
+    the prefix through position len+i, and rows whose ``valid`` count is
+    0 leave both cache and length untouched — the serving loop's Access
+    (prefill-chunk) and Execute (masked decode) engines both land here.
     """
     b, s, d = x.shape
     q, k, v = _project_qkv(cfg, p, x, positions)
@@ -104,8 +113,7 @@ def gqa_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
     if cache is None:
         out = _prefill_attention(cfg, q, k, v, causal=causal, window=window)
         new_cache = None
-    else:
-        assert s == 1, "decode expects one new token"
+    elif s == 1 and valid is None:
         pos = cache["len"]                                     # (B,)
         # scatter the new K/V at each batch row's position
         kc = _scatter_token(cache["k"], k, pos)
@@ -119,6 +127,24 @@ def gqa_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
         if window is not None:
             pass  # window decode handled by length mask upstream for now
         out = out[:, :, None, :]                               # (B,H,1,hd)
+        new_cache = {"k": kc, "v": vc, "len": lens}
+    else:
+        pos = cache["len"]                                     # (B,)
+        if valid is None:
+            valid = jnp.ones((b, s), bool)
+        kc = _scatter_chunk(cache["k"], k, pos, valid)
+        vc = _scatter_chunk(cache["v"], v, pos, valid)
+        lens = pos + valid.sum(-1).astype(pos.dtype)
+        # query i of row b sees cache positions < pos_b + i + 1 (window
+        # decode stays length-masked, matching the single-token path)
+        qlens = pos[:, None] + jnp.arange(1, s + 1, dtype=pos.dtype)[None]
+        if s == 1 and cfg.kernel_mode == "pallas":
+            # masked decode keeps the optimized decode kernel (masked
+            # rows produce garbage that the caller never reads)
+            out = flash_decode(q[:, :, 0, :], kc, vc, qlens[:, 0])
+            out = out[:, :, None, :]
+        else:
+            out = decode_chunk_ref(q, kc, vc, qlens)           # (B,H,S,hd)
         new_cache = {"k": kc, "v": vc, "len": lens}
 
     out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
@@ -136,11 +162,31 @@ def _scatter_token(cache: jnp.ndarray, new: jnp.ndarray,
     return cache * keep + upd
 
 
+def _scatter_chunk(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
+                   valid: jnp.ndarray) -> jnp.ndarray:
+    """cache (B, KVH, Smax, hd); new (B, KVH, C, hd); pos (B,);
+    valid (B, C).  Chunk token i of row b lands at position pos_b + i;
+    invalid tokens write nothing."""
+    smax, c = cache.shape[2], new.shape[2]
+    tgt = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None, :]   # (B, C)
+    onehot = ((tgt[:, :, None] == jnp.arange(smax)[None, None, :])
+              & valid[:, :, None])                             # (B, C, Smax)
+    oh = onehot.astype(cache.dtype)
+    upd = jnp.einsum("bcs,bkcd->bksd", oh, new.astype(cache.dtype))
+    keep = (1 - oh.sum(1))[:, None, :, None]                   # (B,1,Smax,1)
+    return cache * keep + upd
+
+
 # cross attention (enc-dec) ---------------------------------------------------
 
 
-def cross_attn_apply(cfg: ModelConfig, p, x, enc_kv, positions):
-    """x (B,S,D) queries; enc_kv precomputed (k, v) (B,KVH,Senc,hd)."""
+def cross_attn_apply(cfg: ModelConfig, p, x, enc_kv, positions,
+                     per_query: bool = False):
+    """x (B,S,D) queries; enc_kv precomputed (k, v) (B,KVH,Senc,hd).
+
+    ``per_query`` (serving's chunked cache-fill path) computes the S
+    queries sequentially with S=1 shapes so the result is bit-identical
+    to S single-token decode steps — see decode_chunk_ref for why."""
     b, s, d = x.shape
     hd, h = cfg.hd, cfg.n_heads
     dt = cfg.adtype
@@ -149,7 +195,14 @@ def cross_attn_apply(cfg: ModelConfig, p, x, enc_kv, positions):
         q = q + p["bq"].astype(dt)
     q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
     k, v = enc_kv
-    out = _prefill_attention(cfg, q, k, v, causal=False, window=None)
+    if per_query:
+        out = jax.lax.map(
+            lambda qi: _prefill_attention(cfg, qi[:, :, None], k, v,
+                                          causal=False, window=None),
+            q.transpose(2, 0, 1, 3))                   # (S,B,H,1,hd)
+        out = out[:, :, :, 0].transpose(1, 2, 0, 3)    # (B,H,S,hd)
+    else:
+        out = _prefill_attention(cfg, q, k, v, causal=False, window=None)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
     return out @ p["wo"].astype(dt)
 
@@ -209,9 +262,12 @@ def _mla_q(cfg, p, x):
 
 
 def mla_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
-              cache: Optional[Dict[str, Any]] = None):
+              cache: Optional[Dict[str, Any]] = None,
+              valid: Optional[jnp.ndarray] = None):
     """MLA attention.  cache = {"ckv": (B,Smax,r), "kr": (B,Smax,dr),
-    "len": (B,)} — the compressed-latent cache (the MLA memory win)."""
+    "len": (B,)} — the compressed-latent cache (the MLA memory win).
+    S > 1 (or an explicit ``valid`` mask) with a cache is the chunked
+    cache-fill path; see :func:`gqa_apply`."""
     b, s, d = x.shape
     h, dn, dr, dv = cfg.n_heads, cfg.qk_nope, cfg.qk_rope_dim, cfg.v_hd
     r = cfg.kv_lora_rank
@@ -226,12 +282,22 @@ def mla_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
     kr = rope((x @ p["w_kr"].astype(dt))[:, None, :, :],
               positions[:, None, :], cfg.rope_theta)            # (B,1,S,dr)
 
-    if cache is not None:
-        assert s == 1
+    chunked = cache is not None and not (s == 1 and valid is None)
+    if cache is not None and not chunked:
         pos = cache["len"]
         ckv_c = _scatter_vec(cache["ckv"], ckv, pos)            # (B,Smax,r)
         kr_c = _scatter_vec(cache["kr"], kr[:, 0], pos)         # (B,Smax,dr)
         lens = pos + 1
+        ckv_full, kr_full = ckv_c, kr_c[:, None]
+        new_cache = {"ckv": ckv_c, "kr": kr_c, "len": lens}
+        s_kv = ckv_c.shape[1]
+    elif chunked:
+        pos = cache["len"]
+        if valid is None:
+            valid = jnp.ones((b, s), bool)
+        ckv_c = _scatter_vec_chunk(cache["ckv"], ckv, pos, valid)
+        kr_c = _scatter_vec_chunk(cache["kr"], kr[:, 0], pos, valid)
+        lens = pos + valid.sum(-1).astype(pos.dtype)
         ckv_full, kr_full = ckv_c, kr_c[:, None]
         new_cache = {"ckv": ckv_c, "kr": kr_c, "len": lens}
         s_kv = ckv_c.shape[1]
@@ -253,6 +319,14 @@ def mla_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
     if cache is None:
         out = _prefill_attention(cfg, qk, k, v_pad_to(v, k.shape[-1]),
                                  causal=causal, window=None)[..., :dv]
+    elif chunked:
+        qlens = pos[:, None] + jnp.arange(1, s + 1, dtype=pos.dtype)[None]
+        if s == 1 and cfg.kernel_mode == "pallas":
+            out = flash_decode(qk[:, :, 0, :], k, v_pad_to(v, k.shape[-1]),
+                               qlens[:, 0])[..., :dv][:, :, None, :]
+        else:
+            out = decode_chunk_ref(qk, k, v_pad_to(v, k.shape[-1]),
+                                   qlens)[..., :dv]            # (B,H,S,dv)
     else:
         qd = qk[:, :, 0, :]
         if cfg.kernel_mode == "pallas":
@@ -281,3 +355,15 @@ def _scatter_vec(cache: jnp.ndarray, new: jnp.ndarray,
     smax = cache.shape[1]
     onehot = (jnp.arange(smax)[None, :] == pos[:, None])[..., None]
     return jnp.where(onehot, new.astype(cache.dtype), cache)
+
+
+def _scatter_vec_chunk(cache: jnp.ndarray, new: jnp.ndarray,
+                       pos: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """cache (B, Smax, D); new (B, C, D); pos (B,); valid (B, C)."""
+    smax, c = cache.shape[1], new.shape[1]
+    tgt = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None, :]   # (B, C)
+    onehot = ((tgt[:, :, None] == jnp.arange(smax)[None, None, :])
+              & valid[:, :, None])                             # (B, C, Smax)
+    upd = jnp.einsum("bcs,bcd->bsd", onehot.astype(cache.dtype),
+                     new.astype(cache.dtype))
+    return jnp.where(onehot.any(1)[..., None], upd, cache)

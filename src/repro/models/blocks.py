@@ -24,11 +24,13 @@ def _attn_init(cfg: ModelConfig, key):
     return attn.gqa_init(cfg, key)
 
 
-def _attn_apply(cfg, p, x, positions, *, causal=True, window=None, cache=None):
+def _attn_apply(cfg, p, x, positions, *, causal=True, window=None, cache=None,
+                valid=None):
     if cfg.attn_kind == "mla":
-        return attn.mla_apply(cfg, p, x, positions, causal=causal, cache=cache)
+        return attn.mla_apply(cfg, p, x, positions, causal=causal, cache=cache,
+                              valid=valid)
     return attn.gqa_apply(cfg, p, x, positions, causal=causal, window=window,
-                          cache=cache)
+                          cache=cache, valid=valid)
 
 
 def block_init(cfg: ModelConfig, kind: str, key) -> Dict[str, Any]:
@@ -72,7 +74,12 @@ def block_init(cfg: ModelConfig, kind: str, key) -> Dict[str, Any]:
 
 def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *,
                 cache: Optional[Dict[str, Any]] = None,
-                enc_kv=None) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+                enc_kv=None,
+                valid: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """``valid`` (B, S) marks which of the S tokens are real per batch
+    row (chunked cache fill / masked decode); ``None`` means all are —
+    the pre-existing train and single-token decode paths."""
     eps = cfg.norm_eps
     new_cache: Optional[Dict[str, Any]] = None
 
@@ -81,7 +88,8 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *,
         window = cfg.window if kind != "enc" else None
         h, ac = _attn_apply(cfg, p["attn"], rmsnorm(x, p["ln1"], eps),
                             positions, causal=causal, window=window,
-                            cache=None if cache is None else cache["attn"])
+                            cache=None if cache is None else cache["attn"],
+                            valid=valid)
         x = x + h
         if kind == "moe":
             # decode: dropless dispatch (capacity drops would make decode
@@ -99,9 +107,11 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *,
         xin = rmsnorm(x, p["ln1"], eps)
         h_attn, ac = _attn_apply(cfg, p["attn"], xin, positions,
                                  causal=True, window=window,
-                                 cache=None if cache is None else cache["attn"])
+                                 cache=None if cache is None else cache["attn"],
+                                 valid=valid)
         h_ssm, sc = ssm_apply(cfg, p["ssm"], xin,
-                              None if cache is None else cache["ssm"])
+                              None if cache is None else cache["ssm"],
+                              valid=valid)
         x = x + 0.5 * (h_attn + h_ssm)       # parallel heads, mean-combined
         x = x + mlp_apply(cfg, p["mlp"], rmsnorm(x, p["ln2"], eps))
         if cache is not None:
@@ -110,10 +120,12 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *,
     elif kind == "rwkv":
         st = None if cache is None else {"shift": cache["time_shift"],
                                          "wkv": cache["wkv"]}
-        h, ts = rwkv_time_apply(cfg, p["time"], rmsnorm(x, p["ln1"], eps), st)
+        h, ts = rwkv_time_apply(cfg, p["time"], rmsnorm(x, p["ln1"], eps), st,
+                                valid=valid)
         x = x + h
         cs = None if cache is None else cache["chan_shift"]
-        h, ns = rwkv_channel_apply(cfg, p["chan"], rmsnorm(x, p["ln2"], eps), cs)
+        h, ns = rwkv_channel_apply(cfg, p["chan"], rmsnorm(x, p["ln2"], eps), cs,
+                                   valid=valid)
         x = x + h
         if cache is not None:
             new_cache = {"time_shift": ts["shift"], "wkv": ts["wkv"],
@@ -122,11 +134,13 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *,
     elif kind == "xattn":
         h, ac = _attn_apply(cfg, p["attn"], rmsnorm(x, p["ln1"], eps),
                             positions, causal=True,
-                            cache=None if cache is None else cache["attn"])
+                            cache=None if cache is None else cache["attn"],
+                            valid=valid)
         x = x + h
         x = x + attn.cross_attn_apply(cfg, p["xattn"],
                                       rmsnorm(x, p["lnx"], eps), enc_kv,
-                                      positions)
+                                      positions,
+                                      per_query=valid is not None)
         x = x + mlp_apply(cfg, p["mlp"], rmsnorm(x, p["ln2"], eps))
         if cache is not None:
             new_cache = {"attn": ac}

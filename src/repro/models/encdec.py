@@ -127,3 +127,37 @@ def encdec_decode_step(cfg: ModelConfig, params: Params, enc_out: jnp.ndarray,
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = (x[:, 0] @ params["unembed"].astype(cfg.adtype)).astype(jnp.float32)
     return logits, nc
+
+
+def encdec_prefill(cfg: ModelConfig, params: Params, enc_out: jnp.ndarray,
+                   caches: Any, tokens: jnp.ndarray, pos: jnp.ndarray,
+                   n_valid: jnp.ndarray) -> Tuple[jnp.ndarray, Any]:
+    """Chunked, batched decoder cache fill (see transformer.lm_prefill):
+    tokens (B, C), pos (B,), n_valid (B,) -> (logits (B, V) at each
+    row's last valid token, new caches)."""
+    b, c = tokens.shape
+    positions = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None, :]
+    valid = jnp.arange(c)[None, :] < n_valid[:, None]
+    x = embed_tokens(cfg, params, tokens)
+
+    def body(h, pc):
+        layer_params, layer_cache = pc
+        enc_kv = attn.cross_kv(cfg, layer_params["xattn"], enc_out)
+        h2, nc = block_apply(cfg, "xattn", layer_params, h, positions,
+                             cache=layer_cache, enc_kv=enc_kv, valid=valid)
+        return h2, nc
+
+    if not cfg.scan_layers:
+        ncs = []
+        for i in range(cfg.n_layers):
+            x, nci = body(x, jax.tree.map(lambda a: a[i],
+                                          (params["dec"], caches)))
+            ncs.append(nci)
+        nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+    else:
+        x, nc = jax.lax.scan(body, x, (params["dec"], caches))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.clip(n_valid - 1, 0, c - 1)[:, None, None]
+    xl = jnp.take_along_axis(x, last, axis=1)[:, 0]
+    logits = (xl @ params["unembed"].astype(cfg.adtype)).astype(jnp.float32)
+    return logits, nc

@@ -5,13 +5,25 @@
   loss(params, batch) -> scalar                      (train objective)
   apply(params, tokens) -> logits                    (decoder families)
   cache_init(batch, s_max), decode_step(params, cache, token, pos)
+  prefill(params, cache, tokens, pos, n_valid)       (chunked cache fill)
+  cache_reset(cache, keep_mask)                      (slot recycling)
 plus ``input_specs(cfg, shape)`` lives in repro.launch.specs.
+
+``prefill`` is the serving hot-path primitive (see runtime.serve_loop):
+one call advances every batch row by up to C prompt tokens through the
+decode cache; with C=1 and a 0/1 ``n_valid`` mask it doubles as the
+masked decode step, so every family serves through a single compiled
+function per chunk width.  The encdec variant takes ``enc_out`` first,
+mirroring ``decode_step``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
 
 from repro.models import encdec as _encdec
 from repro.models import transformer as _t
@@ -26,7 +38,25 @@ class ModelBundle:
     apply: Optional[Callable] = None
     cache_init: Optional[Callable] = None
     decode_step: Optional[Callable] = None
+    prefill: Optional[Callable] = None
+    cache_reset: Optional[Callable] = None
     encode: Optional[Callable] = None
+
+
+def cache_reset(cache: Any, keep: jnp.ndarray) -> Any:
+    """Zero the decode cache of batch rows where ``keep`` (B,) is False.
+
+    Works for every family because all cache leaves are stacked
+    ``(layers, B, ...)``: attention K/V and lengths, MLA latents, SSM
+    conv/state windows and RWKV shift/WKV states all zero correctly.
+    Freshly admitted slots MUST be reset — attention masks stale K/V by
+    length, but recurrent states and cache lengths carry real state
+    across requests.
+    """
+    def zero(a):
+        m = keep.reshape((1, keep.shape[0]) + (1,) * (a.ndim - 2))
+        return jnp.where(m, a, jnp.zeros_like(a))
+    return jax.tree.map(zero, cache)
 
 
 def build_model(cfg: ModelConfig) -> ModelBundle:
@@ -39,6 +69,10 @@ def build_model(cfg: ModelConfig) -> ModelBundle:
             cache_init=lambda b, s: _encdec.encdec_cache_init(cfg, b, s),
             decode_step=lambda p, enc_out, cache, tok, pos:
                 _encdec.encdec_decode_step(cfg, p, enc_out, cache, tok, pos),
+            prefill=lambda p, enc_out, cache, tok, pos, n_valid:
+                _encdec.encdec_prefill(cfg, p, enc_out, cache, tok, pos,
+                                       n_valid),
+            cache_reset=cache_reset,
         )
     # decoder-only families (dense, moe, ssm, hybrid, vlm)
     return ModelBundle(
@@ -49,4 +83,7 @@ def build_model(cfg: ModelConfig) -> ModelBundle:
         cache_init=lambda b, s: _t.lm_cache_init(cfg, b, s),
         decode_step=lambda p, cache, tok, pos:
             _t.lm_decode_step(cfg, p, cache, tok, pos),
+        prefill=lambda p, cache, tok, pos, n_valid:
+            _t.lm_prefill(cfg, p, cache, tok, pos, n_valid),
+        cache_reset=cache_reset,
     )

@@ -70,9 +70,16 @@ def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
     return jnp.concatenate([pad, x[:, :-1]], axis=1)
 
 
-def rwkv_time_apply(cfg: ModelConfig, p, x, state: Optional[Dict[str, Any]] = None
+def rwkv_time_apply(cfg: ModelConfig, p, x,
+                    state: Optional[Dict[str, Any]] = None,
+                    valid: Optional[jnp.ndarray] = None
                     ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
-    """WKV6 time mix.  state = {"shift": (B,D), "wkv": (B,H,hd,hd)}."""
+    """WKV6 time mix.  state = {"shift": (B,D), "wkv": (B,H,hd,hd)}.
+
+    ``valid`` (B, S) gates the recurrence for chunked cache fill: rows
+    advance their WKV/shift state only through their valid tokens (a row
+    with none keeps its state bit-for-bit — the serve loop's masked
+    decode relies on that)."""
     b, s, d = x.shape
     hd = cfg.rwkv_head_dim
     h = d // hd
@@ -101,15 +108,18 @@ def rwkv_time_apply(cfg: ModelConfig, p, x, state: Optional[Dict[str, Any]] = No
     wkv0 = (jnp.zeros((b, h, hd, hd), jnp.float32) if state is None
             else state["wkv"].astype(jnp.float32))
 
+    vmask = (jnp.ones((b, s), bool) if valid is None else valid)
+
     def step(wkv, inp):
-        rt, kt, vt, wt = inp                                     # (B,H,hd)
+        rt, kt, vt, wt, valid_t = inp                            # (B,H,hd)
         kv = kt[..., :, None] * vt[..., None, :]                 # (B,H,hd,hd)
         out = jnp.einsum("bhi,bhij->bhj", rt, wkv + u[None, :, :, None] * kv)
-        wkv = wt[..., :, None] * wkv + kv
+        wkv = jnp.where(valid_t[:, None, None, None],
+                        wt[..., :, None] * wkv + kv, wkv)
         return wkv, out
 
     seq = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
-           vf.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+           vf.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3), vmask.T)
     wkv_fin, outs = jax.lax.scan(step, wkv0, seq)
     y = outs.transpose(1, 0, 2, 3).reshape(b, s, d)              # (B,S,D)
 
@@ -123,12 +133,26 @@ def rwkv_time_apply(cfg: ModelConfig, p, x, state: Optional[Dict[str, Any]] = No
     y = (y.astype(dt) * g) @ p["wo"].astype(dt)
     new_state = None
     if state is not None:
-        new_state = {"shift": x[:, -1, :], "wkv": wkv_fin.astype(state["wkv"].dtype)}
+        new_state = {"shift": _last_valid(x, state["shift"], valid),
+                     "wkv": wkv_fin.astype(state["wkv"].dtype)}
     return y, new_state
 
 
+def _last_valid(x: jnp.ndarray, prev: jnp.ndarray,
+                valid: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Shift-state update: x (B,S,D) -> the last *valid* token per row,
+    falling back to ``prev`` (B,D) for rows with no valid token."""
+    if valid is None:
+        return x[:, -1, :]
+    n_valid = valid.sum(-1).astype(jnp.int32)
+    idx = jnp.clip(n_valid - 1, 0)[:, None, None]
+    last = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+    return jnp.where((n_valid > 0)[:, None], last, prev.astype(x.dtype))
+
+
 def rwkv_channel_apply(cfg: ModelConfig, p, x,
-                       state: Optional[jnp.ndarray] = None
+                       state: Optional[jnp.ndarray] = None,
+                       valid: Optional[jnp.ndarray] = None
                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     dt = cfg.adtype
     xs = _token_shift(x, state)
@@ -137,7 +161,7 @@ def rwkv_channel_apply(cfg: ModelConfig, p, x,
     k = jax.nn.relu((x * mk + xs * (1 - mk)) @ p["wk"].astype(dt)) ** 2
     r = jax.nn.sigmoid((x * mr + xs * (1 - mr)) @ p["wr"].astype(dt))
     y = r * (k @ p["wv"].astype(dt))
-    return y, (x[:, -1, :] if state is not None else None)
+    return y, (_last_valid(x, state, valid) if state is not None else None)
 
 
 def rwkv_state_init(cfg: ModelConfig, batch: int) -> Dict[str, Any]:

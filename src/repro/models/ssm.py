@@ -51,10 +51,19 @@ def _conv1d_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
 
 
 def ssm_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
-              state: Optional[Dict[str, Any]] = None
+              state: Optional[Dict[str, Any]] = None,
+              valid: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
     """x (B, S, D) -> (B, S, D).  ``state`` (decode): {"conv": (B,K-1,DI),
-    "ssm": (B, DI, N)}."""
+    "ssm": (B, DI, N)}.
+
+    With a state and S > 1 (or an explicit ``valid`` (B, S) mask) this is
+    the chunked cache-fill path: the decode recurrence runs over the
+    chunk token-by-token (same math as S=1 decode steps; XLA's shape-
+    dependent fusion of the discretization chain can still move the
+    result by ~1 ulp — see tests/test_serve_loop.py), and rows with no
+    valid tokens carry their state through unchanged.
+    """
     b, s, d = x.shape
     di = cfg.ssm_expand * d
     n = cfg.ssm_state
@@ -88,13 +97,34 @@ def ssm_apply(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray,
             return al * ar, br + ar * bl
         da_s, h = jax.lax.associative_scan(combine, (da, dbu), axis=1)
         new_state = None
-    else:
+    elif s == 1 and valid is None:
         h_prev = state["ssm"].astype(jnp.float32)                # (B,DI,N)
-        assert s == 1
         h = da[:, 0] * h_prev + dbu[:, 0]
         h = h[:, None]                                           # (B,1,DI,N)
         conv_win = jnp.concatenate([state["conv"], xs], axis=1)[:, 1:]
         new_state = {"conv": conv_win, "ssm": h[:, 0].astype(state["ssm"].dtype)}
+    else:
+        if valid is None:
+            valid = jnp.ones((b, s), bool)
+
+        def step(h_c, inp):
+            da_t, dbu_t, v_t = inp                               # (B,DI,N) x2
+            h_new = jnp.where(v_t[:, None, None],
+                              da_t * h_c + dbu_t, h_c)
+            return h_new, h_new
+
+        h_fin, hs = jax.lax.scan(
+            step, state["ssm"].astype(jnp.float32),
+            (da.transpose(1, 0, 2, 3), dbu.transpose(1, 0, 2, 3),
+             valid.T))
+        h = hs.transpose(1, 0, 2, 3)                             # (B,S,DI,N)
+        # conv window: the K-1 inputs ending at each row's last valid token
+        hist = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+        n_valid = valid.sum(-1).astype(jnp.int32)                # (B,)
+        idx = n_valid[:, None] + jnp.arange(cfg.ssm_conv - 1)[None, :]
+        conv_win = jnp.take_along_axis(hist, idx[..., None], axis=1)
+        new_state = {"conv": conv_win.astype(state["conv"].dtype),
+                     "ssm": h_fin.astype(state["ssm"].dtype)}
 
     y = jnp.einsum("bsdn,bsn->bsd", h, cmat)                     # (B,S,DI)
     y = y + xs_conv.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)

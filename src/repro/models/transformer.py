@@ -163,5 +163,53 @@ def lm_decode_step(cfg: ModelConfig, params: Params, caches: List[Any],
     return logits, new_caches
 
 
+def lm_prefill(cfg: ModelConfig, params: Params, caches: List[Any],
+               tokens: jnp.ndarray, pos: jnp.ndarray, n_valid: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, List[Any]]:
+    """Chunked, batched, teacher-forced cache fill — the serving Access
+    engine's step (paper §3: the decoupled access stream).
+
+    tokens (B, C) int32 — the next C prompt tokens per slot; pos (B,) —
+    each slot's current sequence position (== its cache length);
+    n_valid (B,) — how many of the C tokens are real per slot (0 leaves
+    that slot's cache, recurrent state and position untouched).
+
+    Returns (logits (B, V) float32 taken at each slot's LAST VALID
+    token, new caches).  A C=1 call with n_valid in {0, 1} is a masked
+    decode step — the Execute engine uses exactly that, so prefill and
+    decode share this one primitive (compiled once per chunk width).
+    """
+    b, c = tokens.shape
+    positions = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None, :]
+    valid = jnp.arange(c)[None, :] < n_valid[:, None]
+    x = embed_tokens(cfg, params, tokens)
+
+    new_caches = []
+    for spec, stacked, cache in zip(cfg.layer_specs(), params["segments"],
+                                    caches):
+        def body(h, pc):
+            layer_params, layer_cache = pc
+            h2, nc = block_apply(cfg, spec.kind, layer_params, h, positions,
+                                 cache=layer_cache, valid=valid)
+            return h2, nc
+
+        if not cfg.scan_layers:
+            ncs = []
+            for i in range(spec.count):
+                x, nci = body(x, jax.tree.map(lambda a: a[i], (stacked, cache)))
+                ncs.append(nci)
+            nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+        else:
+            x, nc = jax.lax.scan(body, x, (stacked, cache))
+        new_caches.append(nc)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.clip(n_valid - 1, 0, c - 1)[:, None, None]
+    xl = jnp.take_along_axis(x, last, axis=1)[:, 0]            # (B, D)
+    w_out = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = (xl @ w_out.astype(cfg.adtype)).astype(jnp.float32)
+    return logits, new_caches
+
+
 def param_count(params: Params) -> int:
     return sum(int(p.size) for p in jax.tree.leaves(params))

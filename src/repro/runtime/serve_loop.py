@@ -1,45 +1,379 @@
-"""Batched serving loop: slot-based continuous batching.
+"""Decoupled Access/Execute serving pipeline (paper §3 applied to serving).
 
-Requests (prompt token arrays) enter a queue; a fixed-size slot pool maps
-them onto the batch dimension of the compiled serve_step.  Finished slots
-are refilled without stopping the decode loop — the decode stream stays
-dense.  (On a real deployment the prefill would run on a separate mesh
-slice; here prefill = teacher-forced cache warmup through serve_step.)
+The legacy loop (kept below as :class:`LegacyServeLoop`) admitted each
+request by feeding its prompt one token at a time through the
+*full-batch* decode step: admitting a P-token prompt cost P full-batch
+rounds during which every already-active slot was stalled — and, worse,
+each warmup round also ran the decode step for the stalled slots,
+scattering their current token into their KV caches once per prompt
+token and never resetting a recycled slot's cache length.  That loop is
+the textbook *coupled* access/execute program of DAE4HLS §3: one
+lock-step stream in which a slow access (prefill) serializes everything
+behind it.
+
+The rewrite splits serving into two engines joined by explicit bounded
+channels (the ``repro.core`` channel/occupancy vocabulary — the same
+:class:`~repro.core.trace.Tracer` that profiles the DAE simulator
+profiles serving):
+
+    requests ──admit──▶ [ACCESS: admission + chunked batched prefill]
+                 │                    │
+                 │              prefill_done (first token rides along)
+                 │                    ▼
+                 └─◀─free_slots── [EXECUTE: dense batched decode] ──▶ results
+
+Both engines drive ONE compiled primitive, ``bundle.prefill``:
+
+  * the Access engine advances every admitting slot by up to ``chunk``
+    prompt tokens per step (one call, all slots batched) — admitting a
+    P-token prompt costs ceil(P / chunk) steps instead of P;
+  * the Execute engine calls the same primitive at chunk width 1 with a
+    0/1 per-slot valid mask — a *masked* decode step under which
+    inactive and mid-prefill slots are provably untouched (validity
+    gates every cache scatter and recurrent-state update).
+
+The scheduler interleaves them one step per round, so the dense decode
+stream never stalls for more than a single prefill chunk.  Greedy
+outputs are bit-identical to the legacy loop on the cells where the
+legacy loop was actually correct (one slot, one request at a time);
+``tests/test_serve_loop.py`` pins both that and the teacher-forced
+chunked-prefill/per-token equivalence per architecture family.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.trace import Tracer
+
+# slot phases
+_FREE, _PREFILL, _HANDOFF, _DECODE = 0, 1, 2, 3
+
+
+def _shared_jit(fn):
+    """One jit wrapper (and hence one compile cache) per bundle
+    function, shared across every loop instance built on that bundle —
+    constructing a fresh ServeLoop costs no recompilation.  The wrapper
+    is stashed on the function itself so it dies with the bundle."""
+    jitted = getattr(fn, "_serve_jit", None)
+    if jitted is None:
+        jitted = jax.jit(fn)
+        fn._serve_jit = jitted
+    return jitted
+
 
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray          # (P,) int32
+    prompt: np.ndarray          # (P,) int — P may be 0 (treated as [bos])
     max_new: int = 16
     out: Optional[List[int]] = None
+    frames: Optional[np.ndarray] = None   # encdec: (S_enc, D) frontend frames
+
+
+class Channel:
+    """Bounded FIFO between the serving engines.
+
+    The serving analogue of the simulator's channel FIFOs: ``push``
+    refuses beyond ``capacity`` (backpressure), and every push/pop
+    reports the post-event depth to the tracer under the ``serve``
+    instance — so serve traces read exactly like DAE program traces.
+    """
+
+    def __init__(self, name: str, capacity: Optional[int] = None,
+                 tracer: Optional[Tracer] = None):
+        self.name = name
+        self.capacity = capacity
+        self._q: deque = deque()
+        self._tracer = tracer
+
+    def push(self, item: Any) -> bool:
+        if self.capacity is not None and len(self._q) >= self.capacity:
+            return False
+        self._q.append(item)
+        if self._tracer is not None:
+            self._tracer.on_occupancy("serve", self.name, len(self._q))
+        return True
+
+    def pop(self) -> Any:
+        item = self._q.popleft()
+        if self._tracer is not None:
+            self._tracer.on_occupancy("serve", self.name, len(self._q))
+        return item
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Counters the serve bench reports; ttft is wall-clock seconds from
+    ``run()`` start to each request's first emitted token."""
+
+    rounds: int = 0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    admitted: int = 0
+    ttft: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 class ServeLoop:
+    """Continuous batching with decoupled chunked prefill (Access) and
+    dense masked decode (Execute).
+
+    ``chunk`` is the Access engine's tokens-per-step (the decoupling
+    knob: larger chunks amortize dispatch, smaller chunks bound the
+    decode stream's stall).  ``tracer`` (a ``repro.core.trace.Tracer``)
+    records channel occupancy; ``stats`` counts steps/tokens and TTFT.
+    Encoder-decoder bundles are served too: requests carry ``frames``,
+    encoded once at admission into a per-slot encoder-output buffer.
+    """
+
     def __init__(self, cfg, bundle, params, batch_slots: int, s_max: int,
-                 eos_id: int = -1):
+                 eos_id: int = -1, chunk: int = 32, bos_id: int = 0,
+                 tracer: Optional[Tracer] = None,
+                 admit_capacity: Optional[int] = None):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
         self.cfg = cfg
         self.bundle = bundle
         self.params = params
         self.b = batch_slots
         self.s_max = s_max
         self.eos = eos_id
+        self.chunk = chunk
+        self.bos = bos_id
+        self.tracer = tracer
+        self.cache = bundle.cache_init(batch_slots, s_max)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.cur = np.zeros(batch_slots, np.int32)
+        self.remaining = np.zeros(batch_slots, np.int64)
+        self.phase = np.full(batch_slots, _FREE, np.int8)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self._ptr = np.zeros(batch_slots, np.int64)     # prefill progress
+        self._prompt: List[Optional[np.ndarray]] = [None] * batch_slots
+
+        self._encdec = cfg.family == "encdec"
+        if self._encdec:
+            self._encode = _shared_jit(bundle.encode)
+            self.enc_out = None                         # allocated lazily
+        self._fwd = _shared_jit(bundle.prefill)
+        self._reset = _shared_jit(bundle.cache_reset)
+
+        # explicit bounded channels between the engines
+        self.admit_q = Channel("admit", admit_capacity, tracer)
+        self.handoff = Channel("prefill_done", batch_slots, tracer)
+        self.free_slots = Channel("free_slots", batch_slots, tracer)
+        for s in range(batch_slots):
+            self.free_slots.push(s)
+        self.stats = ServeStats()
+
+    # -- shared step dispatch ------------------------------------------------
+
+    def _step(self, tok: np.ndarray, n_valid: np.ndarray):
+        args = (jnp.asarray(tok, jnp.int32), jnp.asarray(self.pos),
+                jnp.asarray(n_valid, jnp.int32))
+        if self._encdec:
+            logits, self.cache = self._fwd(self.params, self.enc_out,
+                                           self.cache, *args)
+        else:
+            logits, self.cache = self._fwd(self.params, self.cache, *args)
+        return np.asarray(logits)
+
+    # -- Access engine: admission + chunked prefill --------------------------
+
+    def _admit(self) -> None:
+        reset: List[int] = []
+        while self.free_slots and self.admit_q:
+            slot = self.free_slots.pop()
+            req = self.admit_q.pop()
+            prompt = np.asarray(req.prompt, np.int64).reshape(-1)
+            if prompt.size == 0:
+                # empty prompt: generate from an implicit BOS token
+                prompt = np.array([self.bos], np.int64)
+            req.out = []
+            self.active[slot] = req
+            self._prompt[slot] = prompt
+            self._ptr[slot] = 0
+            self.pos[slot] = 0
+            self.phase[slot] = _PREFILL
+            self.stats.admitted += 1
+            reset.append(slot)
+        if reset:
+            keep = np.ones(self.b, bool)
+            keep[reset] = False
+            self.cache = self._reset(self.cache, jnp.asarray(keep))
+            if self._encdec:
+                self._encode_slots(reset)
+
+    def _encode_slots(self, slots: List[int]) -> None:
+        for slot in slots:
+            req = self.active[slot]
+            if req.frames is None:
+                raise ValueError(f"request {req.rid}: encdec serving "
+                                 "requires Request.frames")
+            row = self._encode(self.params, jnp.asarray(req.frames)[None])
+            if self.enc_out is None:
+                # the per-slot encoder-output buffer (and hence the jit
+                # signature of the decode/prefill step) is sized by the
+                # first request; callers must pad frames to one fixed
+                # encoder length per loop
+                self.enc_out = jnp.zeros((self.b,) + row.shape[1:],
+                                         row.dtype)
+            elif row.shape[1:] != self.enc_out.shape[1:]:
+                raise ValueError(
+                    f"request {req.rid}: frames encode to {row.shape[1:]} "
+                    f"but this loop's encoder buffer is "
+                    f"{self.enc_out.shape[1:]}; pad all requests' frames "
+                    "to one fixed encoder length per ServeLoop")
+            self.enc_out = self.enc_out.at[slot].set(row[0])
+
+    def _prefill_step(self, t0: float, results: Dict[int, List[int]]) -> None:
+        slots = np.flatnonzero(self.phase == _PREFILL)
+        if slots.size == 0:
+            return
+        tok = np.zeros((self.b, self.chunk), np.int64)
+        n_valid = np.zeros(self.b, np.int64)
+        for slot in slots:
+            prompt = self._prompt[slot]
+            n = min(self.chunk, prompt.size - self._ptr[slot])
+            tok[slot, :n] = prompt[self._ptr[slot]:self._ptr[slot] + n]
+            n_valid[slot] = n
+        logits = self._step(tok, n_valid)
+        self.stats.prefill_steps += 1
+        self.stats.prefill_tokens += int(n_valid.sum())
+        for slot in slots:
+            self._ptr[slot] += n_valid[slot]
+            self.pos[slot] += n_valid[slot]
+            if self._ptr[slot] < self._prompt[slot].size:
+                continue
+            # prompt complete: the chunk's last-valid logits are the
+            # prediction after the final prompt token — the first output
+            # token rides the handoff channel into the Execute engine,
+            # which activates the slot when it pops the entry
+            req = self.active[slot]
+            first = int(np.argmax(logits[slot]))
+            req.out.append(first)
+            self.stats.ttft[req.rid] = time.perf_counter() - t0
+            self.remaining[slot] = req.max_new - 1
+            if first == self.eos or self.remaining[slot] <= 0:
+                self._finish(slot, results)
+            else:
+                self.phase[slot] = _HANDOFF
+                self.handoff.push((slot, first))
+
+    # -- Execute engine: dense masked decode ---------------------------------
+
+    def _decode_step(self, results: Dict[int, List[int]]) -> None:
+        # absorb freshly prefilled slots: the (slot, first token) entry
+        # on the handoff channel is what activates decoding
+        while self.handoff:
+            slot, first = self.handoff.pop()
+            self.cur[slot] = first
+            self.phase[slot] = _DECODE
+        active = self.phase == _DECODE
+        if not active.any():
+            return
+        logits = self._step(self.cur[:, None], active.astype(np.int64))
+        nxt = np.argmax(logits, axis=-1)
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += int(active.sum())
+        for slot in np.flatnonzero(active):
+            tok = int(nxt[slot])
+            req = self.active[slot]
+            req.out.append(tok)
+            self.cur[slot] = tok
+            self.pos[slot] += 1
+            self.remaining[slot] -= 1
+            if tok == self.eos or self.remaining[slot] <= 0:
+                self._finish(slot, results)
+
+    def _finish(self, slot: int, results: Dict[int, List[int]]) -> None:
+        req = self.active[slot]
+        results[req.rid] = req.out
+        self.active[slot] = None
+        self._prompt[slot] = None
+        self.phase[slot] = _FREE
+        self.free_slots.push(slot)
+
+    # -- scheduler -----------------------------------------------------------
+
+    def run(self, requests: List[Request], max_rounds: int = 100_000
+            ) -> Dict[int, List[int]]:
+        results: Dict[int, List[int]] = {}
+        t0 = time.perf_counter()
+        # validate everything up front: rejecting a request after some
+        # of this batch was admitted would leave slots mid-flight
+        for req in requests:
+            psize = max(1, np.asarray(req.prompt).size)   # empty -> [bos]
+            if psize + req.max_new > self.s_max:
+                raise ValueError(
+                    f"request {req.rid}: prompt ({psize}) + max_new "
+                    f"({req.max_new}) exceeds s_max ({self.s_max})")
+            if self._encdec and req.max_new > 0 and req.frames is None:
+                raise ValueError(f"request {req.rid}: encdec serving "
+                                 "requires Request.frames")
+        overflow = deque()          # requests beyond admit_q capacity
+        for req in requests:
+            if req.max_new <= 0:
+                results[req.rid] = []
+                continue
+            if not self.admit_q.push(req):
+                overflow.append(req)
+        rounds = 0
+        while (self.admit_q or overflow
+               or (self.phase != _FREE).any()):
+            rounds += 1
+            if rounds > max_rounds:
+                raise RuntimeError("serve loop exceeded max_rounds")
+            while overflow and self.admit_q.push(overflow[0]):
+                overflow.popleft()
+            self._admit()
+            self._decode_step(results)
+            self._prefill_step(t0, results)
+        self.stats.rounds = rounds
+        return results
+
+
+class LegacyServeLoop:
+    """The coupled pre-rewrite loop, kept as the serving baseline.
+
+    Admission prefills one token at a time through the FULL-BATCH decode
+    step, so every active slot stalls for the whole prompt length (and
+    has its KV cache polluted once per prompt token — the loop is only
+    actually correct for one slot serving one request from a fresh
+    cache).  ``benchmarks/serve_bench.py`` measures the decoupled loop
+    against this one, and the parity tests pin bit-identical outputs on
+    the cells where this loop is correct.
+    """
+
+    def __init__(self, cfg, bundle, params, batch_slots: int, s_max: int,
+                 eos_id: int = -1, bos_id: int = 0):
+        self.cfg = cfg
+        self.bundle = bundle
+        self.params = params
+        self.b = batch_slots
+        self.s_max = s_max
+        self.eos = eos_id
+        self.bos = bos_id
         self.cache = bundle.cache_init(batch_slots, s_max)
         self.pos = jnp.zeros((batch_slots,), jnp.int32)
         self.cur = jnp.zeros((batch_slots,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.remaining = np.zeros(batch_slots, np.int64)
-        self._step = jax.jit(bundle.decode_step)
+        self._step = _shared_jit(bundle.decode_step)
 
     def _admit(self, queue: List[Request],
                results: Dict[int, List[int]]) -> None:
@@ -48,9 +382,15 @@ class ServeLoop:
                 req = queue.pop(0)
                 req.out = []
                 self.active[slot] = req
+                prompt = np.asarray(req.prompt, np.int64).reshape(-1)
+                if prompt.size == 0:
+                    # empty prompt: generate from an implicit BOS token
+                    # (without this, no prefill iteration ran and
+                    # ``logits`` below was unbound)
+                    prompt = np.array([self.bos], np.int64)
                 # prefill: feed prompt tokens through the decode step
                 pos = 0
-                for tok in req.prompt:
+                for tok in prompt:
                     logits, self.cache = self._step(
                         self.params, self.cache,
                         self.cur.at[slot].set(int(tok)),
@@ -67,8 +407,13 @@ class ServeLoop:
 
     def run(self, requests: List[Request], max_rounds: int = 10_000
             ) -> Dict[int, List[int]]:
-        queue = list(requests)
+        queue = []
         results: Dict[int, List[int]] = {}
+        for req in requests:
+            if req.max_new <= 0:
+                results[req.rid] = []
+                continue
+            queue.append(req)
         rounds = 0
         while (queue or any(a is not None for a in self.active)):
             rounds += 1

@@ -66,7 +66,13 @@ class CacheEntry:
 
 
 class TuneCache:
-    """Load-once, save-atomically JSON store of :class:`CacheEntry`."""
+    """Load-once JSON store of :class:`CacheEntry`; ``save()`` re-reads
+    the file and merges before the atomic replace, so concurrent tuner
+    processes sharing one path keep each other's winners (best score
+    wins on conflicts).  The read-merge-replace is not locked, so a
+    write landing in the short window between another process's re-read
+    and replace can still be lost — acceptable for tuning results,
+    which the loser simply re-derives."""
 
     def __init__(self, path: Optional[Path | str] = None):
         self.path = Path(path) if path is not None else cache_path()
@@ -76,9 +82,7 @@ class TuneCache:
 
     # -- loading / saving ---------------------------------------------------
 
-    def _load(self) -> Dict[str, CacheEntry]:
-        if self._entries is not None:
-            return self._entries
+    def _read_disk(self) -> Dict[str, CacheEntry]:
         entries: Dict[str, CacheEntry] = {}
         try:
             raw = json.loads(self.path.read_text())
@@ -87,11 +91,23 @@ class TuneCache:
                     entries[k] = CacheEntry.from_json(v)
         except (OSError, ValueError, TypeError):
             pass  # missing or corrupt cache == empty cache
-        self._entries = entries
         return entries
+
+    def _load(self) -> Dict[str, CacheEntry]:
+        if self._entries is None:
+            self._entries = self._read_disk()
+        return self._entries
 
     def save(self) -> Path:
         entries = self._load()
+        # merge entries another process persisted since our load: the
+        # whole-file atomic replace would otherwise silently drop a
+        # concurrent tuner's winners.  Disk-only keys are adopted; on a
+        # key both sides tuned, the better (lower) score wins.
+        for k, disk in self._read_disk().items():
+            ours = entries.get(k)
+            if ours is None or disk.score < ours.score:
+                entries[k] = disk
         payload = {
             "version": _SCHEMA_VERSION,
             "entries": {k: e.to_json() for k, e in sorted(entries.items())},

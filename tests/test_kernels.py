@@ -188,3 +188,45 @@ def test_banded_attention_matches_ref():
         for unroll in (False, True):
             out = attention_banded(q, k, v, window=w, chunk=c, unroll=unroll)
             np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-5)
+
+
+# -- dispatch helpers ---------------------------------------------------------
+
+
+def test_decode_chunk_ref_matches_decode_ref():
+    """The chunked-prefill oracle must be bit-identical to per-query
+    decode_ref calls (serving parity depends on it)."""
+    from repro.kernels.flash_attention.ref import decode_chunk_ref, decode_ref
+    b, h, kvh, c, s, d = 2, 4, 2, 3, 32, 16
+    q = jnp.asarray(R.standard_normal((b, h, c, d)), jnp.float32)
+    kc = jnp.asarray(R.standard_normal((b, kvh, s, d)), jnp.float32)
+    vc = jnp.asarray(R.standard_normal((b, kvh, s, d)), jnp.float32)
+    lens = jnp.asarray(R.integers(1, s, (b, c)), jnp.int32)
+    out = decode_chunk_ref(q, kc, vc, lens)
+    for i in range(c):
+        np.testing.assert_array_equal(
+            np.asarray(out[:, :, i]),
+            np.asarray(decode_ref(q[:, :, i], kc, vc, lens[:, i])))
+
+
+@pytest.mark.parametrize("raw,expect", [
+    (None, False),        # unset: fall through to the backend check
+    ("0", False), ("false", False), ("", False), ("no", False),
+    ("off", False), ("  FALSE  ", False),
+    ("1", True), ("true", True), ("yes", True), ("interpret", True),
+])
+def test_resolve_interpret_env_parsing(raw, expect, monkeypatch):
+    """Regression: REPRO_FORCE_INTERPRET=0/false/empty used to force
+    interpret ON (any non-empty string was truthy)."""
+    from repro.kernels.common import resolve_interpret
+    if raw is None:
+        monkeypatch.delenv("REPRO_FORCE_INTERPRET", raising=False)
+    else:
+        monkeypatch.setenv("REPRO_FORCE_INTERPRET", raw)
+    # pretend we are on TPU so the backend fallback returns False and
+    # the env var's parse is the only thing that can flip the result
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert resolve_interpret(None) is expect
+    # an explicit caller value still always wins
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False

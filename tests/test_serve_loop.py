@@ -1,17 +1,46 @@
-"""Batched serving loop: continuous batching with slot refill."""
+"""Decoupled serving pipeline: completion, parity with the legacy loop,
+chunked-prefill teacher-forced equivalence, and the admission edge cases
+(empty prompt, max_new=0, EOS during prefill, slot reuse)."""
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
+from repro.core.trace import TraceSummary, Tracer
 from repro.models.registry import build_model
-from repro.runtime.serve_loop import Request, ServeLoop
+from repro.runtime.serve_loop import LegacyServeLoop, Request, ServeLoop
+
+# two cheap-to-compile archs (dense attention + pure-recurrent) carry
+# the fast tier; the full arch matrix rides the slow tier
+FAST_ARCH = "qwen3-4b"
+FAST_ARCHS = ("qwen3-4b", "rwkv6-1.6b")
+FAMILY_ARCHS = FAST_ARCHS + ("granite-moe-3b-a800m", "hymba-1.5b")
+ALL_ARCHS = FAMILY_ARCHS + ("minicpm3-4b", "granite-34b", "qwen2-72b",
+                            "deepseek-v2-lite-16b", "chameleon-34b")
+
+_MODELS = {}
+
+
+def _model(arch):
+    if arch not in _MODELS:
+        cfg = get_config(arch, smoke=True)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        _MODELS[arch] = (cfg, m, params)
+    return _MODELS[arch]
+
+
+def _prompt(n, vocab, seed=0):
+    return np.random.default_rng(seed).integers(0, vocab, size=n)
+
+
+# -- basic serving ------------------------------------------------------------
 
 
 def test_serve_loop_completes_all_requests():
-    cfg = get_config("qwen3-4b", smoke=True)
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
+    cfg, m, params = _model(FAST_ARCH)
     loop = ServeLoop(cfg, m, params, batch_slots=2, s_max=64)
     reqs = [Request(rid=i,
                     prompt=np.array([1 + i, 2 + i, 3 + i], np.int64),
@@ -22,14 +51,13 @@ def test_serve_loop_completes_all_requests():
     for rid, toks in results.items():
         assert 1 <= len(toks) <= 4
         assert all(0 <= t < cfg.vocab for t in toks)
+    assert loop.stats.admitted == 5
+    assert set(loop.stats.ttft) == {0, 1, 2, 3, 4}
 
 
 def test_serve_greedy_matches_apply():
     """Slot-pooled decode must equal unbatched greedy decoding."""
-    import jax.numpy as jnp
-    cfg = get_config("qwen3-4b", smoke=True)
-    m = build_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
+    cfg, m, params = _model(FAST_ARCH)
     prompt = np.array([5, 9, 2], np.int64)
 
     # reference: argmax continuation via full re-apply
@@ -42,3 +70,336 @@ def test_serve_greedy_matches_apply():
     loop = ServeLoop(cfg, m, params, batch_slots=1, s_max=32)
     out = loop.run([Request(rid=0, prompt=prompt, max_new=3)])[0]
     assert out == ref
+
+
+def test_serve_matches_legacy_on_parity_cell():
+    """One slot, one request — the only regime where the legacy loop is
+    correct — must produce bit-identical greedy outputs."""
+    cfg, m, params = _model(FAST_ARCH)
+    for plen, chunk in [(1, 4), (5, 4), (9, 4), (6, 32)]:
+        prompt = _prompt(plen, cfg.vocab, seed=plen)
+        new = ServeLoop(cfg, m, params, batch_slots=1, s_max=64, chunk=chunk)
+        out_new = new.run([Request(rid=0, prompt=prompt, max_new=6)])[0]
+        leg = LegacyServeLoop(cfg, m, params, batch_slots=1, s_max=64)
+        out_leg = leg.run([Request(rid=0, prompt=prompt, max_new=6)])[0]
+        assert out_new == out_leg, (plen, chunk)
+
+
+def test_concurrent_admission_does_not_corrupt_decode():
+    """The legacy loop's defining bug: admitting slot B's prompt stepped
+    slot A's decode cache once per prompt token.  In the decoupled loop
+    a slot's output must be independent of traffic on other slots."""
+    cfg, m, params = _model(FAST_ARCH)
+    long_a = _prompt(9, cfg.vocab, seed=1)
+    long_b = _prompt(24, cfg.vocab, seed=2)
+
+    solo = ServeLoop(cfg, m, params, batch_slots=2, s_max=64, chunk=4)
+    ref = solo.run([Request(rid=0, prompt=long_a, max_new=8)])[0]
+
+    both = ServeLoop(cfg, m, params, batch_slots=2, s_max=64, chunk=4)
+    results = both.run([Request(rid=0, prompt=long_a, max_new=8),
+                        Request(rid=1, prompt=long_b, max_new=8)])
+    assert results[0] == ref
+
+
+def test_slot_reuse_after_finish():
+    """A recycled slot must serve a fresh request bit-identically to a
+    fresh loop (cache length AND recurrent state reset on admission)."""
+    for arch in (FAST_ARCH, "rwkv6-1.6b"):
+        cfg, m, params = _model(arch)
+        p1 = _prompt(5, cfg.vocab, seed=3)
+        p2 = _prompt(7, cfg.vocab, seed=4)
+
+        fresh = ServeLoop(cfg, m, params, batch_slots=1, s_max=32)
+        ref = fresh.run([Request(rid=1, prompt=p2, max_new=4)])[1]
+
+        reused = ServeLoop(cfg, m, params, batch_slots=1, s_max=32)
+        results = reused.run([Request(rid=0, prompt=p1, max_new=4),
+                              Request(rid=1, prompt=p2, max_new=4)])
+        assert results[1] == ref, arch
+
+
+# -- admission edge cases -----------------------------------------------------
+
+
+def test_empty_prompt_regression():
+    """Zero-length prompts crashed LegacyServeLoop._admit with
+    UnboundLocalError; both loops now generate from an implicit BOS."""
+    cfg, m, params = _model(FAST_ARCH)
+    empty = np.zeros((0,), np.int64)
+    out_leg = LegacyServeLoop(cfg, m, params, batch_slots=1, s_max=32).run(
+        [Request(rid=0, prompt=empty, max_new=4)])[0]
+    out_new = ServeLoop(cfg, m, params, batch_slots=1, s_max=32).run(
+        [Request(rid=0, prompt=empty, max_new=4)])[0]
+    assert len(out_leg) == 4
+    assert out_new == out_leg
+    # identical to an explicit single-BOS prompt
+    out_bos = ServeLoop(cfg, m, params, batch_slots=1, s_max=32).run(
+        [Request(rid=0, prompt=np.array([0], np.int64), max_new=4)])[0]
+    assert out_new == out_bos
+
+
+def test_max_new_zero_completes_without_tokens():
+    cfg, m, params = _model(FAST_ARCH)
+    reqs = lambda: [Request(rid=0, prompt=np.array([3, 1], np.int64),
+                            max_new=0),
+                    Request(rid=1, prompt=np.array([2, 5], np.int64),
+                            max_new=3)]
+    for loop in (ServeLoop(cfg, m, params, batch_slots=1, s_max=32),
+                 LegacyServeLoop(cfg, m, params, batch_slots=1, s_max=32)):
+        results = loop.run(reqs())
+        assert results[0] == []
+        assert len(results[1]) <= 3 and results[1]
+
+
+def test_eos_during_prefill_frees_slot():
+    """If the prompt's own prediction is EOS the request finishes inside
+    the Access engine; the slot must recycle cleanly."""
+    cfg, m, params = _model(FAST_ARCH)
+    prompt = _prompt(4, cfg.vocab, seed=5)
+    probe = ServeLoop(cfg, m, params, batch_slots=1, s_max=32)
+    first = probe.run([Request(rid=0, prompt=prompt, max_new=4)])[0][0]
+
+    loop = ServeLoop(cfg, m, params, batch_slots=1, s_max=32, eos_id=first)
+    results = loop.run([Request(rid=0, prompt=prompt, max_new=4),
+                        Request(rid=1, prompt=_prompt(3, cfg.vocab, seed=6),
+                                max_new=3)])
+    assert results[0] == [first]
+    assert len(results[1]) >= 1
+    assert loop.stats.decode_steps > 0 or len(results[1]) == 1
+
+
+def test_request_overflowing_s_max_rejected():
+    cfg, m, params = _model(FAST_ARCH)
+    loop = ServeLoop(cfg, m, params, batch_slots=1, s_max=16)
+    with pytest.raises(ValueError, match="s_max"):
+        loop.run([Request(rid=0, prompt=_prompt(12, cfg.vocab), max_new=8)])
+
+
+# -- chunked prefill: teacher-forced parity -----------------------------------
+
+
+def _prefill_vs_stepwise(arch, chunk=3, plen=7):
+    """Chunked bundle.prefill must match a per-token decode_step warmup:
+    boundary logits, final cache, and the logits of a decode step taken
+    from each cache — BIT-IDENTICAL for every family except the hymba
+    hybrid, whose SSM discretization chain XLA fuses shape-dependently
+    (straight-line S=1 vs scanned S=C differ from the eager oracle by
+    ~1 ulp each, in different directions); there the greedy argmax must
+    still match and logits must agree to ~1 ulp."""
+    cfg, m, params = _model(arch)
+    exact = cfg.family != "hybrid"
+
+    def check(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        if exact:
+            np.testing.assert_array_equal(a, b)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+            np.testing.assert_array_equal(np.argmax(a, -1),
+                                          np.argmax(b, -1))
+    b, smax = 2, 32
+    prompts = np.random.default_rng(8).integers(0, cfg.vocab, (b, plen))
+
+    cache_a = m.cache_init(b, smax)
+    for t in range(plen):
+        la, cache_a = m.decode_step(params, cache_a,
+                                    jnp.asarray(prompts[:, t], jnp.int32),
+                                    jnp.full((b,), t, jnp.int32))
+    cache_b = m.cache_init(b, smax)
+    pos, ptr = np.zeros(b, np.int32), 0
+    while ptr < plen:
+        n = min(chunk, plen - ptr)
+        tok = np.zeros((b, chunk), np.int32)
+        tok[:, :n] = prompts[:, ptr:ptr + n]
+        lb, cache_b = m.prefill(params, cache_b, jnp.asarray(tok),
+                                jnp.asarray(pos),
+                                jnp.full((b,), n, jnp.int32))
+        pos += n
+        ptr += n
+
+    check(la, lb)
+    nxt = jnp.asarray(np.argmax(np.asarray(lb), -1), jnp.int32)
+    full = jnp.full((b,), plen, jnp.int32)
+    da, _ = m.decode_step(params, cache_a, nxt, full)
+    db, _ = m.prefill(params, cache_b, nxt[:, None], full,
+                      jnp.ones((b,), jnp.int32))
+    check(da, db)
+
+
+@pytest.mark.parametrize("arch", FAST_ARCHS)
+def test_prefill_parity_teacher_forced(arch):
+    _prefill_vs_stepwise(arch)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", sorted(set(ALL_ARCHS) - set(FAST_ARCHS)))
+def test_prefill_parity_teacher_forced_all_archs(arch):
+    _prefill_vs_stepwise(arch)
+
+
+@pytest.mark.slow
+def test_prefill_parity_encdec():
+    cfg, m, params = _model("seamless-m4t-large-v2")
+    b, smax, plen, chunk = 2, 32, 6, 4
+    rng = np.random.default_rng(9)
+    frames = jnp.asarray(rng.standard_normal((b, 8, cfg.d_model)),
+                         jnp.float32)
+    enc_out = m.encode(params, frames)
+    prompts = rng.integers(0, cfg.vocab, (b, plen))
+
+    cache_a = m.cache_init(b, smax)
+    for t in range(plen):
+        la, cache_a = m.decode_step(params, enc_out, cache_a,
+                                    jnp.asarray(prompts[:, t], jnp.int32),
+                                    jnp.full((b,), t, jnp.int32))
+    cache_b = m.cache_init(b, smax)
+    pos, ptr = np.zeros(b, np.int32), 0
+    while ptr < plen:
+        n = min(chunk, plen - ptr)
+        tok = np.zeros((b, chunk), np.int32)
+        tok[:, :n] = prompts[:, ptr:ptr + n]
+        lb, cache_b = m.prefill(params, enc_out, cache_b, jnp.asarray(tok),
+                                jnp.asarray(pos),
+                                jnp.full((b,), n, jnp.int32))
+        pos += n
+        ptr += n
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.slow
+def test_serve_encdec_end_to_end():
+    """Encoder-decoder serving: requests carry frames, encoded once at
+    admission; greedy output must match a manual decode_step rollout."""
+    cfg, m, params = _model("seamless-m4t-large-v2")
+    rng = np.random.default_rng(11)
+    frames = rng.standard_normal((2, 8, cfg.d_model)).astype(np.float32)
+    prompts = [_prompt(4, cfg.vocab, seed=12), _prompt(6, cfg.vocab, seed=13)]
+
+    # reference rollout per request (batch 1, per-token prefill + decode)
+    refs = []
+    for fr, prompt in zip(frames, prompts):
+        enc = m.encode(params, jnp.asarray(fr)[None])
+        cache = m.cache_init(1, 32)
+        for t, tok in enumerate(prompt):
+            logits, cache = m.decode_step(
+                params, enc, cache, jnp.asarray([tok], jnp.int32),
+                jnp.asarray([t], jnp.int32))
+        out = [int(np.argmax(np.asarray(logits)[0]))]
+        pos = len(prompt)
+        for _ in range(2):
+            logits, cache = m.decode_step(
+                params, enc, cache, jnp.asarray([out[-1]], jnp.int32),
+                jnp.asarray([pos], jnp.int32))
+            out.append(int(np.argmax(np.asarray(logits)[0])))
+            pos += 1
+        refs.append(out)
+
+    loop = ServeLoop(cfg, m, params, batch_slots=2, s_max=32, chunk=4)
+    results = loop.run([Request(rid=i, prompt=p, max_new=3, frames=fr)
+                        for i, (p, fr) in enumerate(zip(prompts, frames))])
+    assert results[0] == refs[0]
+    assert results[1] == refs[1]
+
+
+@pytest.mark.parametrize("arch", FAST_ARCHS)
+def test_masked_step_leaves_inactive_rows_untouched(arch):
+    """n_valid=0 rows must keep cache AND recurrent state bit-identical
+    (the Execute engine decodes through mid-prefill slots every step)."""
+    _assert_masked_rows_untouched(arch)
+
+
+@pytest.mark.slow
+def test_masked_step_leaves_inactive_rows_untouched_hybrid():
+    _assert_masked_rows_untouched("hymba-1.5b")
+
+
+def _assert_masked_rows_untouched(arch):
+    cfg, m, params = _model(arch)
+    b, smax = 2, 16
+    cache = m.cache_init(b, smax)
+    tok = jnp.asarray([[7], [9]], jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    _, cache = m.prefill(params, cache, tok, pos,
+                         jnp.asarray([1, 1], jnp.int32))
+    before = jax.tree.leaves(cache)
+    _, cache2 = m.prefill(params, cache, tok,
+                          jnp.asarray([1, 1], jnp.int32),
+                          jnp.asarray([1, 0], jnp.int32))
+    after = jax.tree.leaves(cache2)
+    for x, y in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(x)[:, 1],
+                                      np.asarray(y)[:, 1], arch)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_serve_matches_legacy_all_families(arch):
+    cfg, m, params = _model(arch)
+    prompt = _prompt(6, cfg.vocab, seed=10)
+    out_new = ServeLoop(cfg, m, params, batch_slots=1, s_max=32,
+                        chunk=4).run(
+        [Request(rid=0, prompt=prompt, max_new=5)])[0]
+    out_leg = LegacyServeLoop(cfg, m, params, batch_slots=1, s_max=32).run(
+        [Request(rid=0, prompt=prompt, max_new=5)])[0]
+    assert out_new == out_leg
+
+
+# -- channels and traces ------------------------------------------------------
+
+
+def test_serve_channel_traces():
+    cfg, m, params = _model(FAST_ARCH)
+    tracer = Tracer()
+    loop = ServeLoop(cfg, m, params, batch_slots=2, s_max=64, chunk=4,
+                     tracer=tracer)
+    loop.run([Request(rid=i, prompt=_prompt(5 + i, cfg.vocab, seed=i),
+                      max_new=3) for i in range(4)])
+    summary = tracer.summary()
+    occ = summary.channel_occupancy()
+    for name in ("serve/admit", "serve/free_slots", "serve/prefill_done"):
+        assert name in occ, occ
+        assert summary.channels[name].events > 0
+    # admit saw all four requests queued behind two slots
+    assert summary.channels["serve/admit"].occ_max >= 2
+    # traces survive the JSON round trip like any DAE program trace
+    rt = TraceSummary.from_json(summary.to_json())
+    assert rt.channel_occupancy() == occ
+
+
+def test_admit_capacity_backpressure():
+    cfg, m, params = _model(FAST_ARCH)
+    tracer = Tracer()
+    loop = ServeLoop(cfg, m, params, batch_slots=1, s_max=32,
+                     admit_capacity=2, tracer=tracer)
+    results = loop.run([Request(rid=i, prompt=_prompt(3, cfg.vocab, seed=i),
+                                max_new=2) for i in range(5)])
+    assert set(results) == set(range(5))
+    assert tracer.summary().channels["serve/admit"].occ_max <= 2
+
+
+def test_decode_never_stalls_more_than_one_chunk():
+    """Scheduler invariant: with decode-active slots present, prefill
+    and decode steps alternate — so decode_steps must be within one of
+    the rounds that had any decode-active slot.  Weak proxy: a long
+    prompt admitted mid-decode adds ceil(P/chunk) prefill steps but the
+    decode stream keeps stepping (total decode steps unchanged)."""
+    cfg, m, params = _model(FAST_ARCH)
+    chunk = 4
+
+    solo = ServeLoop(cfg, m, params, batch_slots=2, s_max=96, chunk=chunk)
+    solo.run([Request(rid=0, prompt=_prompt(4, cfg.vocab, seed=1),
+                      max_new=12)])
+    solo_decode_steps = solo.stats.decode_steps
+
+    busy = ServeLoop(cfg, m, params, batch_slots=2, s_max=96, chunk=chunk)
+    long_p = 32
+    busy.run([Request(rid=0, prompt=_prompt(4, cfg.vocab, seed=1),
+                      max_new=12),
+              Request(rid=1, prompt=_prompt(long_p, cfg.vocab, seed=2),
+                      max_new=4)])
+    # decode performed the same number of steps for request 0 even while
+    # request 1's long prompt was prefilling...
+    assert busy.stats.decode_steps >= solo_decode_steps
+    # ...and prefill advanced in chunks, not per token
+    assert busy.stats.prefill_steps <= (4 + long_p) // chunk + 2

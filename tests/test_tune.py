@@ -93,6 +93,34 @@ def test_cache_path_honours_env(tmp_cache):
     assert default_cache().path == tmp_cache
 
 
+def test_concurrent_saves_merge_instead_of_clobbering(tmp_cache):
+    """Regression: save() used to replace the whole file from a
+    load-once snapshot, so two tuner processes sharing one cache path
+    silently dropped each other's winners."""
+    a = TuneCache(tmp_cache)
+    b = TuneCache(tmp_cache)
+    a.put("op_a", CacheEntry(config={"rif": 8}, score=1.0))   # saves
+    b.put("op_b", CacheEntry(config={"rif": 16}, score=2.0))  # saves
+    merged = TuneCache(tmp_cache)
+    assert merged.get("op_a").config == {"rif": 8}
+    assert merged.get("op_b").config == {"rif": 16}
+    # a's handle also sees b's entry after its next save
+    a.save()
+    assert a.get("op_b").config == {"rif": 16}
+
+
+def test_concurrent_saves_keep_better_score_on_conflict(tmp_cache):
+    a = TuneCache(tmp_cache)
+    b = TuneCache(tmp_cache)
+    a.put("op", CacheEntry(config={"rif": 8}, score=5.0))
+    # b never saw a's write; its winner for the same key is better
+    b.put("op", CacheEntry(config={"rif": 32}, score=3.0))
+    assert TuneCache(tmp_cache).get("op").config == {"rif": 32}
+    # and the worse config cannot clobber the better one back
+    a.put("op", CacheEntry(config={"rif": 8}, score=5.0))
+    assert TuneCache(tmp_cache).get("op").config == {"rif": 32}
+
+
 # -- spaces -------------------------------------------------------------------
 
 
