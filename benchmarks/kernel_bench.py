@@ -5,17 +5,30 @@ metric that transfers is the simulator's cycle model (RIF sweeps showing
 latency hiding) plus interpret-mode correctness-at-shape.  We report
 both: us_per_call is the CPU interpret wall time (plumbing overhead
 indicator), derived carries the simulator cycles.
+
+Besides the CSV stream, every run emits a machine-readable
+``BENCH_kernels.json`` at the repo root (uploaded as a CI artifact) so
+the perf trajectory — per-op tuned-vs-default wall-clock plus the chase
+kernels' decoupled-vs-XLA-fallback ratio — is tracked across PRs.
+
+``--smoke`` shrinks problem sizes and tuning budgets to CI scale and
+additionally drives both new ``dae_chase`` kernels end-to-end against
+their oracles.
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.workloads import run_workload
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
 
 
 def _time(fn, *args, reps=3):
@@ -26,15 +39,26 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(csv_print) -> None:
+def run(csv_print, smoke: bool = False) -> None:
     r = np.random.default_rng(0)
+    rows = []
+
+    def emit(name: str, us: float, derived: str) -> None:
+        csv_print(f"{name},{us:.0f},{derived}")
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+
+    report = {"schema": 1, "smoke": smoke, "backend": jax.default_backend(),
+              "rows": rows, "tuned_vs_default": {}, "chase": {}}
+
+    sim_scale = "small" if smoke else "paper"
 
     # RIF sweep (the paper's central knob) from the simulator
     for rif in (2, 8, 32, 128):
-        res = run_workload("hashtable", "rhls_dec", scale="paper",
+        res = run_workload("hashtable", "rhls_dec", scale=sim_scale,
                            latency=100, rif=rif)
-        csv_print(f"kernel/rif_sweep/hashtable/rif={rif},0,"
-                  f"cycles={res.cycles};golden={res.golden}")
+        emit(f"kernel/rif_sweep/hashtable/rif={rif}", 0,
+             f"cycles={res.cycles};golden={res.golden}")
 
     # channel-capacity sensitivity sweep (§5.3/§5.4): capacity = rif+slack;
     # negative slack starves the round-robin chase into the deadlock the
@@ -42,53 +66,139 @@ def run(csv_print) -> None:
     from repro.core.simulator import DeadlockError
     for slack in (-4, 0, 1, 16, 64):
         try:
-            res = run_workload("hashtable", "rhls_dec", scale="paper",
+            res = run_workload("hashtable", "rhls_dec", scale=sim_scale,
                                latency=100, rif=32, cap_slack=slack)
             derived = f"cycles={res.cycles};golden={res.golden}"
         except DeadlockError:
             derived = "cycles=deadlock"
-        csv_print(f"kernel/cap_sweep/hashtable/slack={slack},0,{derived}")
+        emit(f"kernel/cap_sweep/hashtable/slack={slack}", 0, derived)
 
     # gather: decoupled kernel (interpret) vs XLA take.  Knobs are passed
     # explicitly so these baseline rows never pick up a tuned config from
     # a previous run's cache.
     from repro.kernels.dae_gather import dae_gather
-    table = jnp.asarray(r.standard_normal((4096, 256)), jnp.float32)
-    idx = jnp.asarray(r.integers(0, 4096, 512), jnp.int32)
+    gn, gm = (1024, 128) if smoke else (4096, 512)
+    table = jnp.asarray(r.standard_normal((gn, 256)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, gn, gm), jnp.int32)
     for method in ("pipelined", "rif", "ref"):
         us = _time(lambda: dae_gather(table, idx, method=method,
                                       block_d=512, chunk=64, rif=8))
-        csv_print(f"kernel/gather/{method},{us:.0f},interpret_cpu")
+        emit(f"kernel/gather/{method}", us, "interpret_cpu")
 
-    # gather: plan_rif analytic default vs the tuned config the dispatcher
-    # resolves from the repro.tune cache (tuning here on a miss)
+    # per-op tuned-vs-default: the analytic fallback the dispatcher
+    # resolves on a cold cache (plan_rif-sized rings, documented default
+    # blocks — passed explicitly so a warm cache cannot contaminate the
+    # baseline), vs the tuned-cache winner it resolves after tuning
     from repro.core.pipeline import plan_rif
-    from repro.tune import dispatch_config, tune_kernel
+    from repro.tune import KERNEL_DIMS, dispatch_config, tune_kernel
     from repro.kernels.common import resolve_interpret
-    res = tune_kernel("dae_gather", (4096, 256, 512), max_evals=16, reps=2)
-    rif_plan = plan_rif(64 * 256 * 4).rif  # the dispatcher's miss fallback
-    us_default = _time(lambda: dae_gather(table, idx, method="pipelined",
-                                          block_d=512, chunk=64,
-                                          rif=rif_plan))
-    us_tuned = _time(lambda: dae_gather(table, idx))  # consults the cache
-    cfg = dispatch_config("dae_gather", (4096, 256, 512), table.dtype,
-                          resolve_interpret(None))
-    cfg_s = ";".join(f"{k}={v}" for k, v in sorted(cfg.items()))
-    csv_print(f"kernel/gather/plan_default,{us_default:.0f},interpret_cpu")
-    csv_print(f"kernel/gather/tuned,{us_tuned:.0f},"
-              f"{cfg_s};tune_evals={res.evals}")
-
-    # merge
     from repro.kernels.dae_merge import merge_sorted
+    from repro.kernels.dae_chase import batched_searchsorted, hash_lookup
+    from repro.kernels.dae_chase.kernel import ENTRY_LANES
+
+    evals = 4 if smoke else 16
     a = jnp.sort(jnp.asarray(r.standard_normal(2048), jnp.float32))
     b = jnp.sort(jnp.asarray(r.standard_normal(2048), jnp.float32))
-    us = _time(lambda: merge_sorted(a, b, tile=256))
-    csv_print(f"kernel/merge/pallas,{us:.0f},interpret_cpu")
+    ss_n, ss_m = KERNEL_DIMS["batched_searchsorted"]
+    ss_table = jnp.sort(jnp.asarray(r.integers(0, 1 << 30, ss_n), jnp.int32))
+    ss_keys = jnp.asarray(r.integers(0, 1 << 30, ss_m), jnp.int32)
+    hl_n, hl_m = KERNEL_DIMS["hash_lookup"]
+    chain = 8
+    hl_ek = jnp.asarray(np.arange(hl_n), jnp.int32)
+    hl_ev = jnp.asarray(r.integers(0, 1 << 20, hl_n), jnp.int32)
+    hl_en = jnp.asarray([(i + 1) if (i + 1) % chain else -1
+                         for i in range(hl_n)], jnp.int32)
+    hl_heads = jnp.asarray(r.integers(0, hl_n // chain, hl_m) * chain,
+                           jnp.int32)
+    hl_keys = hl_heads + jnp.asarray(r.integers(0, chain, hl_m), jnp.int32)
 
-    # flash attention
+    # the cold-cache fallback knobs, mirrored from each dispatcher
+    gather_rif0 = plan_rif(64 * 256 * 4).rif          # chunk * dp * f32
+    merge_rif0 = plan_rif(256 * 4).rif                # tile * f32
+    ss_rif0 = plan_rif(128 * 4).rif                   # block * i32
+    hl_rif0 = plan_rif(ENTRY_LANES * 4).rif           # packed entry row
+    tuned_cells = {
+        # op -> (dims, cold-cache-default call, tuned/dispatcher call)
+        "dae_gather": (
+            (gn, 256, gm),
+            lambda: dae_gather(table, idx, method="pipelined", block_d=256,
+                               chunk=64, rif=gather_rif0),
+            lambda: dae_gather(table, idx)),
+        "dae_merge": (
+            (2048, 2048),
+            lambda: merge_sorted(a, b, tile=256, rif=merge_rif0),
+            lambda: merge_sorted(a, b)),
+        "batched_searchsorted": (
+            (ss_n, ss_m),
+            lambda: batched_searchsorted(ss_table, ss_keys, block=128,
+                                         chunk=64, rif=ss_rif0),
+            lambda: batched_searchsorted(ss_table, ss_keys)),
+        "hash_lookup": (
+            (hl_n, hl_m),
+            lambda: hash_lookup(hl_ek, hl_ev, hl_en, hl_heads, hl_keys,
+                                max_steps=chain, chunk=64, rif=hl_rif0),
+            lambda: hash_lookup(hl_ek, hl_ev, hl_en, hl_heads, hl_keys,
+                                max_steps=chain)),
+    }
+    for op, (dims, default_fn, tuned_fn) in tuned_cells.items():
+        res = tune_kernel(op, dims, max_evals=evals, reps=2)
+        us_default = _time(default_fn)
+        us_tuned = _time(tuned_fn)   # dispatcher consults the cache
+        dt = ss_table.dtype if op == "batched_searchsorted" else \
+            jnp.int32.dtype if op == "hash_lookup" else jnp.float32.dtype
+        cfg = dispatch_config(op, dims, dt, resolve_interpret(None))
+        cfg_s = ";".join(f"{k}={v}" for k, v in sorted(cfg.items()))
+        emit(f"kernel/{op}/plan_default", us_default, "interpret_cpu")
+        emit(f"kernel/{op}/tuned", us_tuned,
+             f"{cfg_s};tune_evals={res.evals}")
+        report["tuned_vs_default"][op] = {
+            "dims": list(dims), "default_us": round(us_default, 1),
+            "tuned_us": round(us_tuned, 1), "config": cfg,
+            "tune_evals": res.evals,
+        }
+
+    # chase: decoupled Pallas kernel vs the XLA fallback (method='ref')
+    # — the paper's headline irregular workloads on the kernel path.
+    # Wall-clock here is interpret-mode plumbing, so the json records
+    # both sides rather than gating a ratio; correctness IS gated.
+    from repro.kernels.dae_chase import hash_lookup_ref, searchsorted_ref
+    ss_out = batched_searchsorted(ss_table, ss_keys, block=128, chunk=64,
+                                  rif=8)
+    np.testing.assert_array_equal(
+        np.asarray(ss_out), np.asarray(searchsorted_ref(ss_table, ss_keys)))
+    hl_out = hash_lookup(hl_ek, hl_ev, hl_en, hl_heads, hl_keys,
+                         max_steps=chain, chunk=64, rif=8)
+    np.testing.assert_array_equal(
+        np.asarray(hl_out),
+        np.asarray(hash_lookup_ref(hl_ek, hl_ev, hl_en, hl_heads, hl_keys,
+                                   chain)))
+    chase_cells = {
+        "batched_searchsorted": lambda m: batched_searchsorted(
+            ss_table, ss_keys, block=128, chunk=64, rif=8, method=m),
+        "hash_lookup": lambda m: hash_lookup(
+            hl_ek, hl_ev, hl_en, hl_heads, hl_keys, max_steps=chain,
+            chunk=64, rif=8, method=m),
+    }
+    for op, fn in chase_cells.items():
+        us_pallas = _time(lambda: fn("pallas"))
+        us_xla = _time(lambda: fn("ref"))
+        emit(f"kernel/{op}/decoupled", us_pallas, "interpret_cpu;parity=ok")
+        emit(f"kernel/{op}/xla_fallback", us_xla, "xla_cpu")
+        report["chase"][op] = {"decoupled_us": round(us_pallas, 1),
+                               "xla_fallback_us": round(us_xla, 1),
+                               "parity": "ok"}
+
+    # merge + flash single cells (plumbing-overhead indicators)
+    us = _time(lambda: merge_sorted(a, b, tile=256, rif=2))
+    emit("kernel/merge/pallas", us, "interpret_cpu")
+
     from repro.kernels.flash_attention import flash_attention
     q = jnp.asarray(r.standard_normal((1, 4, 512, 64)), jnp.float32)
     k = jnp.asarray(r.standard_normal((1, 2, 512, 64)), jnp.float32)
     v = jnp.asarray(r.standard_normal((1, 2, 512, 64)), jnp.float32)
     us = _time(lambda: flash_attention(q, k, v))
-    csv_print(f"kernel/flash/pallas,{us:.0f},interpret_cpu")
+    emit("kernel/flash/pallas", us, "interpret_cpu")
+
+    BENCH_JSON.write_text(json.dumps(report, indent=1, sort_keys=True)
+                          + "\n")
+    csv_print(f"kernel/bench_json,0,path={BENCH_JSON.name}")

@@ -5,7 +5,10 @@
     table2_resources  Table 2  (buffer/channel resource analogue)
     table3_moms       Table 3  (MOMS + DRAM memory model subset)
     fig4_golden       Fig. 4   (overhead over the golden reference)
-    kernel_bench      decoupled-kernel microbenches + RIF/capacity sweeps
+    kernel-bench      decoupled-kernel microbenches + RIF/capacity sweeps,
+                      per-op tuned-vs-default and chase decoupled-vs-XLA
+                      cells; writes BENCH_kernels.json at the repo root
+                      (--smoke for the CI-sized subset)
     tune              autotune decoupling params, persist the config cache
     scale             N=1..64 tenants on one shared memory system
                       (throughput degradation + channel-occupancy traces;
@@ -58,9 +61,9 @@ def main() -> None:
     if on("fig4"):
         from benchmarks import fig4_golden
         fig4_golden.run(_csv)
-    if on("kernel"):
+    if on("kernel-bench"):
         from benchmarks import kernel_bench
-        kernel_bench.run(_csv)
+        kernel_bench.run(_csv, smoke="--smoke" in flags)
     if on("tune"):
         from benchmarks import tune
         tune.run(_csv)

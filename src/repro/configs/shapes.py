@@ -2,7 +2,8 @@
 
 decode_* / long_* lower ``serve_step`` (one new token against a KV cache
 of seq_len), NOT ``train_step``.  long_500k requires sub-quadratic
-attention — skipped for pure full-attention archs (DESIGN.md §5).
+attention — skipped for pure full-attention archs (docs/architecture.md
+§"Model families and input shapes").
 """
 
 from __future__ import annotations

@@ -175,6 +175,14 @@ ProcessGen = Generator[Effect, Any, None]
 class Process:
     """A named sequential process (one Access or Execute loop).
 
+    ``gen`` accepts either a live generator (legacy, single-shot) or a
+    zero-argument *factory* returning a fresh generator.  Factory-built
+    processes are rebuildable: :meth:`fresh` re-instantiates them, which
+    is what lets :meth:`DaeProgram.validate_channels` dry-run a program
+    without consuming the generators the timed simulation will pump.
+    Factories must create all of their mutable loop state inside the
+    generator body (every builder in :mod:`repro.core.workloads` does).
+
     ``ii`` is the initiation interval floor imposed by the *schedule* of
     the surrounding implementation: statically scheduled HLS (the Vitis
     baseline) often cannot reach II=1 for these loops (paper §7), while
@@ -183,8 +191,32 @@ class Process:
     """
 
     name: str
-    gen: ProcessGen
+    gen: Any  # ProcessGen, or Callable[[], ProcessGen] (a factory)
     ii: int = 1
+    factory: Optional[Callable[[], ProcessGen]] = None
+
+    def __post_init__(self) -> None:
+        # live generators are not callable; factories (generator
+        # functions, partials, closures) are
+        if self.factory is None and callable(self.gen):
+            self.factory = self.gen
+        if self.factory is not None and (self.gen is self.factory
+                                         or self.gen is None):
+            self.gen = self.factory()
+
+    @property
+    def rebuildable(self) -> bool:
+        return self.factory is not None
+
+    def fresh(self) -> "Process":
+        """A new :class:`Process` with a freshly instantiated generator
+        (requires a factory)."""
+        if self.factory is None:
+            raise ValueError(
+                f"process {self.name!r} was built from a live generator "
+                f"and cannot be re-instantiated; pass the generator "
+                f"function itself to Process to make it rebuildable")
+        return Process(self.name, self.factory, ii=self.ii)
 
 
 @dataclasses.dataclass
@@ -196,6 +228,18 @@ class DaeProgram:
     # map port name -> one of the simulator's memory models; filled by the
     # scheduler, declared here so programs are self-describing.
     ports: Tuple[str, ...] = ("mem",)
+
+    @property
+    def rebuildable(self) -> bool:
+        """True when every process carries a generator factory, so the
+        program can be validated and re-instantiated at will."""
+        return all(p.rebuildable for p in self.processes)
+
+    def fresh(self) -> "DaeProgram":
+        """A new program with freshly instantiated process generators
+        (requires every process to be rebuildable)."""
+        return dataclasses.replace(
+            self, processes=[p.fresh() for p in self.processes])
 
     def validate_channels(
         self,
@@ -218,8 +262,13 @@ class DaeProgram:
         conflict and :class:`ConservationError` if the dry run stalls or
         ends with undrained channels (§5.1).
 
-        Note: the dry run *consumes* the process generators; validate a
-        freshly built program, then rebuild it before simulating.
+        When every process carries a generator *factory* (pass the
+        generator function to :class:`Process` instead of calling it),
+        the dry run pumps fresh instances and leaves the program's own
+        generators untouched — validate-then-simulate needs no rebuild.
+        Legacy programs built from live generators are still accepted,
+        but the dry run consumes them: validate a freshly built program,
+        then rebuild it before simulating.
         """
         from repro.core.simulator import Fused, Par  # deferred: no cycle
 
@@ -279,7 +328,8 @@ class DaeProgram:
                 return value
             return None  # Delay / Store / StoreWait / Halt
 
-        gens = [(p.name, p.gen) for p in self.processes]
+        gens = [(p.name, p.factory() if p.rebuildable else p.gen)
+                for p in self.processes]
         steps = 0
 
         def advance(i: int, send: Any) -> Any:

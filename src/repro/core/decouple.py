@@ -16,11 +16,19 @@ depth.  Knobs left at ``None`` resolve in dispatch order (see
      tuned at this (op, shape, dtype, backend) key;
   3. else ``repro.core.pipeline.plan_rif`` sizes the ring analytically
      from the latency-bandwidth product.
+
+The kernels themselves share one emission layer,
+:mod:`repro.kernels.ring` (re-exported here): ``RingChannel.request`` /
+``.response`` are the TPU forms of ``decouple_request`` /
+``decouple_response`` from :mod:`repro.core.dae`, so the simulator IR
+and the TPU emitter speak the same §3 vocabulary.
 """
 
 from __future__ import annotations
 
 from repro.core.pipeline import plan_rif, RifPlan
+from repro.kernels.ring import (RingChannel, access_execute, ring_step,
+                                ring_scratch_shapes)
 from repro.kernels.dae_gather.ops import dae_gather as decoupled_gather
 from repro.kernels.dae_spmv.ops import dae_spmv as decoupled_spmv
 from repro.kernels.dae_spmv.ops import csr_to_bsr
@@ -40,6 +48,10 @@ from repro.kernels.grouped_matmul.ops import grouped_matmul
 __all__ = [
     "plan_rif",
     "RifPlan",
+    "RingChannel",
+    "access_execute",
+    "ring_step",
+    "ring_scratch_shapes",
     "decoupled_gather",
     "decoupled_spmv",
     "csr_to_bsr",

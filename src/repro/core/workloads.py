@@ -486,14 +486,14 @@ def _binsearch_phases(data, config, early, latency, rif, mem_factory,
                     if done:
                         yield Store("out", oi, ov)
                         break
-        procs = [Process("coupled", gen())]
+        procs = [Process("coupled", gen)]
     elif config == "vitis_dec":
         gen = _lockstep_chase(ch, st, len(keys), iters_fixed, init_state,
                               fixed_step, "out", chunk=min(64, rif))
-        procs = [Process("lockstep", gen(), ii=VITIS_DEC_II)]
+        procs = [Process("lockstep", gen, ii=VITIS_DEC_II)]
     elif config == "rhls_dec":
         gen = _roundrobin_chase(ch, st, len(keys), init_state, step, "out", rif)
-        procs = [Process("roundrobin", gen())]
+        procs = [Process("roundrobin", gen)]
     elif config == "rhls_stream":
         if early:
             res, loads = binsearch_ref(arr, keys, True)
@@ -502,7 +502,7 @@ def _binsearch_phases(data, config, early, latency, rif, mem_factory,
         vst = StreamChannel("bs_vals", capacity=_chan_cap(rif, cap))
         a, e = _stream_chase(ch, vst, st, len(keys), loads, init_state, step,
                              "out", rif)
-        procs = [Process("access", a()), Process("execute", e())]
+        procs = [Process("access", a), Process("execute", e)]
     else:
         raise ValueError(config)
 
@@ -572,20 +572,20 @@ def _hashtable_phases(data, config, latency, rif, mem_factory, cap=None,
                     if done:
                         yield Store("out", oi, ov)
                         break
-        procs = [Process("coupled", gen())]
+        procs = [Process("coupled", gen)]
     elif config == "vitis_dec":
         gen = _lockstep_chase(ch, st, len(keys), chain_len, init_state,
                               fixed_step, "out", chunk=min(64, rif))
-        procs = [Process("lockstep", gen(), ii=VITIS_DEC_II)]
+        procs = [Process("lockstep", gen, ii=VITIS_DEC_II)]
     elif config == "rhls_dec":
         gen = _roundrobin_chase(ch, st, len(keys), init_state, step, "out", rif)
-        procs = [Process("roundrobin", gen())]
+        procs = [Process("roundrobin", gen)]
     elif config == "rhls_stream":
         expected, loads = hashtable_ref(entries, keys, heads)
         vst = StreamChannel("ht_vals", capacity=_chan_cap(rif, cap))
         a, e = _stream_chase(ch, vst, st, len(keys), loads, init_state, step,
                              "out", rif)
-        procs = [Process("access", a()), Process("execute", e())]
+        procs = [Process("access", a), Process("execute", e)]
     else:
         raise ValueError(config)
 
@@ -652,7 +652,7 @@ def _spmv_program(rows, cols, val, vec_data, out_data, config, latency, rif,
                     yield Delay(VITIS_FP_II)
                 yield Store("out", i, s)
                 prev = b
-        return DaeProgram(f"{tag}[vitis]", [Process("spmv", gen())]), mems
+        return DaeProgram(f"{tag}[vitis]", [Process("spmv", gen)]), mems
 
     gated_addr = config in ("rhls",)  # request loop gated by rows (false dep)
     exec_ii = VITIS_DEC_II if config == "vitis_dec" else 1
@@ -720,11 +720,11 @@ def _spmv_program(rows, cols, val, vec_data, out_data, config, latency, rif,
                 yield Delay(store_gate)
 
     procs = [
-        Process("rows_req", p_rows()),
-        Process("bounds", p_bounds()),
-        Process("addr", p_addr_gated() if gated_addr else p_addr_free()),
-        Process("vec_req", p_vec()),
-        Process("exec", p_exec(), ii=exec_ii),
+        Process("rows_req", p_rows),
+        Process("bounds", p_bounds),
+        Process("addr", p_addr_gated if gated_addr else p_addr_free),
+        Process("vec_req", p_vec),
+        Process("exec", p_exec, ii=exec_ii),
     ]
     return DaeProgram(f"{tag}[{config}]", procs), mems
 
@@ -809,7 +809,7 @@ def _merge_pass_program(src_data, dst_data, n, width, config, latency, rif,
                     else:
                         yield Store(dst_port, k, vj)
                         j += 1
-        return DaeProgram(f"merge[{config}]", [Process("merge", gen())]), mems
+        return DaeProgram(f"merge[{config}]", [Process("merge", gen)]), mems
 
     # decoupled variants: request loops run ahead across the whole pass
     def p_req_i():
@@ -864,9 +864,9 @@ def _merge_pass_program(src_data, dst_data, n, width, config, latency, rif,
 
     ii = VITIS_DEC_II if config == "vitis_dec" else 1
     procs = [
-        Process("req_i", p_req_i()),
-        Process("req_j", p_req_j()),
-        Process("merge", p_merge(), ii=ii),
+        Process("req_i", p_req_i),
+        Process("req_j", p_req_j),
+        Process("merge", p_merge, ii=ii),
     ]
     return DaeProgram(f"merge[{config}]", procs), mems
 
@@ -887,7 +887,7 @@ def _copy_pass_program(src_data, dst_data, n, config, latency, rif,
             for k in range(base, base + n):
                 yield Delay(2)
                 yield Store(dst_port, k, src_data[k])
-        return DaeProgram("copy[vitis]", [Process("copy", gen())]), mems
+        return DaeProgram("copy[vitis]", [Process("copy", gen)]), mems
 
     def p_req():
         for k in range(base, base + n):
@@ -900,7 +900,7 @@ def _copy_pass_program(src_data, dst_data, n, config, latency, rif,
     ii = VITIS_DEC_II if config == "vitis_dec" else 1
     return (
         DaeProgram(f"copy[{config}]",
-                   [Process("req", p_req()), Process("copy", p_copy(), ii=ii)]),
+                   [Process("req", p_req), Process("copy", p_copy, ii=ii)]),
         mems,
     )
 
@@ -1018,7 +1018,7 @@ def _scale_copy_program(out_data, vec_data, n, alpha, config, latency, rif,
                 yield Delay(2)
                 yield Store("vecw", k, out_data[k] * alpha)
             yield StoreWait("vecw")
-        return DaeProgram("scalecopy[vitis]", [Process("copy", gen())]), mems
+        return DaeProgram("scalecopy[vitis]", [Process("copy", gen)]), mems
 
     def p_req():
         for k in range(n):
@@ -1040,10 +1040,10 @@ def _scale_copy_program(out_data, vec_data, n, alpha, config, latency, rif,
             yield Store("vecw", k, float(v) * alpha)
         yield StoreWait("vecw")
 
-    copy_proc = (Process("copy", p_copy_stream()) if extra_hop
-                 else Process("copy", p_copy(), ii=ii))
+    copy_proc = (Process("copy", p_copy_stream) if extra_hop
+                 else Process("copy", p_copy, ii=ii))
     return (DaeProgram(f"scalecopy[{config}]",
-                       [Process("req", p_req()), copy_proc]), mems)
+                       [Process("req", p_req), copy_proc]), mems)
 
 
 # ---------------------------------------------------------------------------

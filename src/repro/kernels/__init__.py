@@ -1,5 +1,12 @@
 """Pallas TPU kernels for the compute hot-spots the paper optimizes.
 
+``ring.py`` is the shared explicit-decoupling emitter: a ``RingChannel``
+(``request``/``response`` on a rif-deep scratch+semaphore ring — the TPU
+form of ``decouple_request``/``decouple_response``) plus the
+``access_execute``/``ring_step`` loop scaffolds that generate the
+prologue/steady-state/drain structure once.  Every irregular-access
+kernel below is emitted through it.
+
 Each subpackage has kernel.py (pl.pallas_call + BlockSpec), ops.py (the
 jit'd public wrapper) and ref.py (the pure-jnp oracle used by tests and
 the dry-run):
@@ -7,7 +14,8 @@ the dry-run):
   dae_gather      decoupled row gather (scalar-prefetch + RIF DMA ring)
   dae_spmv        BSR sparse matvec (paper Listing 2, TPU block form)
   dae_merge       merge-path + bitonic merge (paper Listing 3)
-  dae_chase       parallel pointer chasing ops (paper Listings 4/5)
+  dae_chase       decoupled block binsearch + lock-step hash-chain walk
+                  (paper Listings 4/5)
   flash_attention block-streamed attention + (paged) decode
   grouped_matmul  MoE expert GEMM with scalar-prefetched group stream
 """

@@ -19,7 +19,7 @@ from typing import Optional
 import jax
 
 __all__ = ["cdiv", "round_up", "env_flag", "resolve_interpret",
-           "tuned_knobs", "MXU_LANE", "VMEM_BYTES"]
+           "tuned_knobs", "ring_rif", "MXU_LANE", "VMEM_BYTES"]
 
 # TPU v5e hardware shape constants (see benchmarks/hw.py for the full set)
 MXU_LANE = 128          # lane dimension granularity
@@ -53,6 +53,19 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     if env_flag("REPRO_FORCE_INTERPRET"):
         return True
     return jax.default_backend() != "tpu"
+
+
+def ring_rif(rif: Optional[int], block_bytes: int) -> int:
+    """Resolve a still-``None`` ring depth to the ``plan_rif`` analytic
+    default for ``block_bytes`` requests — the last tier of the
+    explicit → tune-cache → analytic dispatch order, shared by every
+    ring-emitted kernel's dispatcher."""
+    if rif is not None:
+        return rif
+    # deferred: repro.core.__init__ -> decouple -> kernels ops would
+    # cycle on a top-level repro.core.pipeline import
+    from repro.core.pipeline import plan_rif
+    return plan_rif(block_bytes).rif
 
 
 def tuned_knobs(op: str, dims, dtype, interpret: bool, **defaults):

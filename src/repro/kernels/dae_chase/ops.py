@@ -1,23 +1,25 @@
 """Parallel pointer chasing (paper §4.2, Listings 4/5) on TPU.
 
-Hardware adaptation (DESIGN.md §2/§8): an FPGA follows one pointer per
-chain per memory response; a TPU fetches 512-byte DMA granules.  Two
-consequences drive the design:
+Hardware adaptation (docs/architecture.md §"TPU adaptation"): an FPGA
+follows one pointer per chain per memory response; a TPU fetches
+512-byte DMA granules.  Two consequences drive the design:
 
 * **binsearch** becomes a *block* search: every probe fetches a whole
-  128-wide block of the sorted table (via the decoupled gather kernel),
-  which resolves log2(128) = 7 levels of the search in one response.
-  The chase loop is the lock-step CHUNK-wide variant (Listing 5): all B
-  keys advance one level per round, with the gather's scalar-prefetch
-  stream as the decoupled request channel.
+  block of the sorted table, which resolves log2(block) levels of the
+  search in one response.  The VMEM-resident summary search (the top of
+  the B-tree) runs in XLA here; the decoupled block probes run in the
+  ``searchsorted_blocks`` Pallas kernel with ``rif`` fetches in flight.
 
-* **hashtable** keeps the chain-walk structure, but walks B chains in
-  lock-step with masking (a resolved chain keeps re-requesting its tail,
-  exactly like the paper's fixed-length variant keeps issuing redundant
-  loads rather than adding conditional-issue circuitry).
+* **hashtable** keeps the chain-walk structure: the ``hash_probe``
+  kernel walks ``chunk`` chains per grid step in lock-step, ``rif``
+  independent dependent-load chains in flight per level (a resolved
+  chain keeps re-requesting its tail, exactly like the paper's
+  fixed-length variant keeps issuing redundant loads rather than adding
+  conditional-issue circuitry).
 
-Both ops are compositions: jax.lax control flow (the Execute loop) over
-the dae_gather Pallas kernel (the decoupled Access engine).
+Both kernels are emitted through the shared :mod:`repro.kernels.ring`
+layer; knobs left at ``None`` resolve in the dispatch order explicit →
+tune-cache winner → ``plan_rif`` analytic seeding.
 """
 
 from __future__ import annotations
@@ -28,16 +30,31 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import (cdiv, resolve_interpret, round_up,
-                                  tuned_knobs)
-from repro.kernels.dae_gather.ops import dae_gather
+from repro.kernels.common import (cdiv, resolve_interpret, ring_rif,
+                                  round_up, tuned_knobs)
+from repro.kernels.dae_chase import kernel as _k
+from repro.kernels.dae_chase.kernel import ENTRY_LANES
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "method"))
-def _searchsorted_impl(table, keys, *, block, interpret, method):
+def _chase_knobs(op: str, dims, dtype, interp, *, block_bytes, chunk, rif,
+                 **extra):
+    """Shared explicit → tune-cache → ``plan_rif`` resolution for the
+    chase ops' ``chunk``/``rif`` (and any op-specific ``extra``) knobs."""
+    knobs = tuned_knobs(op, dims, dtype, interp, chunk=(chunk, 64),
+                        rif=(rif, None), **extra)
+    knobs["rif"] = ring_rif(knobs["rif"], block_bytes)
+    return knobs
+
+
+@functools.partial(jax.jit, static_argnames=("block", "chunk", "rif",
+                                             "interpret", "method"))
+def _searchsorted_impl(table, keys, *, block, chunk, rif, interpret, method):
     n = table.shape[0]
+    m = keys.shape[0]
     if method == "ref":
         return jnp.searchsorted(table, keys, side="right").astype(jnp.int32)
+    if m == 0:  # no probes: a zero-sized operand cannot enter the kernel
+        return jnp.zeros((0,), jnp.int32)
 
     big = (jnp.inf if jnp.issubdtype(table.dtype, jnp.floating)
            else jnp.iinfo(table.dtype).max)
@@ -53,70 +70,89 @@ def _searchsorted_impl(table, keys, *, block, interpret, method):
     blk = jnp.clip(jnp.searchsorted(summary, keys, side="right") - 1,
                    0, n_blocks - 1).astype(jnp.int32)
 
-    # decoupled probe: fetch each key's block (the irregular access)
-    rows = dae_gather(tiles, blk, method="pipelined", interpret=interpret)
-    within = jnp.sum(rows <= keys[:, None], axis=1).astype(jnp.int32)
-    idx = blk * block + within
-    return jnp.minimum(idx, n).astype(jnp.int32)
+    # decoupled probe: the kernel fetches each key's block through the
+    # ring emitter and resolves the within-block position in one pass
+    c = min(chunk, max(m, 1))
+    mp = round_up(m, c)
+    if mp != m:
+        keys = jnp.concatenate([keys, jnp.zeros((mp - m,), keys.dtype)])
+        blk = jnp.concatenate([blk, jnp.zeros((mp - m,), blk.dtype)])
+    out = _k.searchsorted_blocks(tiles, blk, keys, n, chunk=c, rif=rif,
+                                 interpret=interpret)
+    return out[:m]
 
 
 def batched_searchsorted(table: jax.Array, keys: jax.Array, *,
-                         block: Optional[int] = None, method: str = "pallas",
+                         block: Optional[int] = None,
+                         chunk: Optional[int] = None,
+                         rif: Optional[int] = None, method: str = "pallas",
                          interpret: Optional[bool] = None) -> jax.Array:
     """'right' insertion points of ``keys`` in sorted ``table`` via
-    decoupled block probes.  ``block=None`` resolves via the tune cache
-    (falling back to the 128-lane DMA granule)."""
+    decoupled block probes.  ``block``/``chunk``/``rif`` left ``None``
+    resolve explicit → tune cache → analytic (128-lane DMA granule;
+    ``plan_rif`` over one block's byte size)."""
     interp = resolve_interpret(interpret)
-    if block is None:
-        block = tuned_knobs("batched_searchsorted",
-                            (table.shape[0], keys.shape[0]), table.dtype,
-                            interp, block=(None, 128))["block"]
-    return _searchsorted_impl(table, keys, block=block, interpret=interp,
-                              method=method)
+    if block is None or chunk is None or rif is None:
+        knobs = _chase_knobs("batched_searchsorted",
+                             (table.shape[0], keys.shape[0]), table.dtype,
+                             interp, block_bytes=(block or 128)
+                             * table.dtype.itemsize, chunk=chunk, rif=rif,
+                             block=(block, 128))
+        block, chunk, rif = knobs["block"], knobs["chunk"], knobs["rif"]
+    return _searchsorted_impl(table, keys, block=block, chunk=chunk, rif=rif,
+                              interpret=interp, method=method)
 
 
-@functools.partial(jax.jit, static_argnames=("max_steps", "interpret", "method"))
+@functools.partial(jax.jit, static_argnames=("max_steps", "chunk", "rif",
+                                             "interpret", "method"))
 def _hash_lookup_impl(entry_keys, entry_vals, entry_next, heads, keys, *,
-                      max_steps, interpret, method):
+                      max_steps, chunk, rif, interpret, method):
     from repro.kernels.dae_chase.ref import hash_lookup_ref
     if method == "ref":
         return hash_lookup_ref(entry_keys, entry_vals, entry_next, heads,
                                keys, max_steps)
 
     n = entry_keys.shape[0]
-    # pack (key, val, next) into rows so one decoupled gather fetches a
-    # full entry; lane padding inside dae_gather keeps it DMA-aligned
-    packed = jnp.stack([entry_keys.astype(jnp.int32),
-                        entry_vals.astype(jnp.int32),
-                        entry_next.astype(jnp.int32)], axis=1)  # (N, 3)
+    m = heads.shape[0]
+    if m == 0:  # no lookups: a zero-sized operand cannot enter the kernel
+        return jnp.zeros((0,), jnp.int32)
+    # pack (key, val, next) into DMA-aligned rows so one decoupled fetch
+    # returns a full entry
+    packed = jnp.zeros((max(n, 1), ENTRY_LANES), jnp.int32)
+    packed = packed.at[:n, 0].set(entry_keys.astype(jnp.int32))
+    packed = packed.at[:n, 1].set(entry_vals.astype(jnp.int32))
+    packed = packed.at[:n, 2].set(entry_next.astype(jnp.int32))
 
-    b = heads.shape[0]
-
-    def step(state, _):
-        idx, found, val = state
-        safe = jnp.clip(idx, 0, n - 1)
-        ent = dae_gather(packed, safe, method="pipelined",
-                         interpret=interpret)           # (B, 3)
-        k, v, nxt = ent[:, 0], ent[:, 1], ent[:, 2]
-        alive = (idx >= 0) & ~found
-        hit = alive & (k == keys)
-        val = jnp.where(hit, v, val)
-        found = found | hit
-        idx = jnp.where(alive & ~hit, nxt, idx)
-        return (idx, found, val), None
-
-    init = (heads.astype(jnp.int32), jnp.zeros(b, bool),
-            jnp.full(b, -1, jnp.int32))
-    (idx, found, val), _ = jax.lax.scan(step, init, None, length=max_steps)
-    return jnp.where(found, val, -1)
+    c = min(chunk, max(m, 1))
+    mp = round_up(m, c)
+    heads = heads.astype(jnp.int32)
+    keys = keys.astype(jnp.int32)
+    if mp != m:
+        # padding chains start dead (head -1) and resolve to -1
+        heads = jnp.concatenate([heads, jnp.full((mp - m,), -1, jnp.int32)])
+        keys = jnp.concatenate([keys, jnp.zeros((mp - m,), jnp.int32)])
+    out = _k.hash_probe(packed, heads, keys, chunk=c, rif=rif,
+                        max_steps=max_steps, interpret=interpret)
+    return out[:m]
 
 
 def hash_lookup(entry_keys: jax.Array, entry_vals: jax.Array,
                 entry_next: jax.Array, heads: jax.Array, keys: jax.Array, *,
-                max_steps: int = 16, method: str = "pallas",
+                max_steps: int = 16, chunk: Optional[int] = None,
+                rif: Optional[int] = None, method: str = "pallas",
                 interpret: Optional[bool] = None) -> jax.Array:
-    """Lock-step parallel chain walk over a separate-chaining hash table."""
+    """Lock-step parallel chain walk over a separate-chaining hash table.
+
+    ``chunk``/``rif`` left ``None`` resolve explicit → tune cache →
+    analytic (``plan_rif`` over one packed entry's byte size)."""
+    interp = resolve_interpret(interpret)
+    if chunk is None or rif is None:
+        knobs = _chase_knobs("hash_lookup",
+                             (entry_keys.shape[0], heads.shape[0]),
+                             jnp.int32.dtype, interp,
+                             block_bytes=ENTRY_LANES * 4, chunk=chunk,
+                             rif=rif)
+        chunk, rif = knobs["chunk"], knobs["rif"]
     return _hash_lookup_impl(entry_keys, entry_vals, entry_next, heads, keys,
-                             max_steps=max_steps,
-                             interpret=resolve_interpret(interpret),
-                             method=method)
+                             max_steps=max_steps, chunk=chunk, rif=rif,
+                             interpret=interp, method=method)

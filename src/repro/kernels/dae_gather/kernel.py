@@ -1,6 +1,7 @@
 """Decoupled row gather — the TPU realization of the paper's decoupled load.
 
-Two variants, mirroring the two decoupling mechanisms in DESIGN.md §2:
+Two variants, mirroring the two decoupling mechanisms described in
+docs/architecture.md §"TPU adaptation":
 
 * ``gather_pipelined`` — the *scalar-prefetch* form.  The index vector is
   prefetched to SMEM (`PrefetchScalarGridSpec`), so the Pallas pipeline's
@@ -11,11 +12,13 @@ Two variants, mirroring the two decoupling mechanisms in DESIGN.md §2:
   RIF=2 blocks in flight.
 
 * ``gather_rif`` — the *manual multi-buffer DMA* form (Listing 4's RIF
-  generalization).  The kernel body issues ``rif`` async HBM→VMEM copies
-  ahead of consumption through a rotating scratch ring with per-slot DMA
-  semaphores.  Every request is matched by exactly one wait (the paper's
-  §5.1 conservation rule, structurally enforced), and capacity is the
-  ring depth — deadlock-free by construction.
+  generalization), emitted through :mod:`repro.kernels.ring`: a
+  :class:`~repro.kernels.ring.RingChannel` keeps ``rif`` async HBM→VMEM
+  copies in flight, and :func:`~repro.kernels.ring.access_execute`
+  generates the prologue/steady-state/drain structure.  Every request is
+  matched by exactly one wait (the paper's §5.1 conservation rule,
+  structurally enforced), and capacity is the ring depth — deadlock-free
+  by construction.
 """
 
 from __future__ import annotations
@@ -28,6 +31,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import cdiv
+from repro.kernels.ring import RingChannel, access_execute, \
+    ring_scratch_shapes
 
 
 # ---------------------------------------------------------------------------
@@ -79,40 +84,20 @@ def _gather_rif_kernel(idx_ref, table_hbm, out_ref, scratch, sems, *,
                        chunk: int, rif: int):
     """Process ``chunk`` rows per grid step with ``rif`` copies in flight.
 
-    Access loop  = cp.start() on slot k % rif   (decouple_request)
-    Execute loop = cp.wait() + copy-out         (decouple_response)
+    ring.request = decouple_request (async start on slot k % rif)
+    ring.response + copy-out = decouple_response
     """
     c = pl.program_id(0)
     base = c * chunk
 
-    def _copy(k, slot):
-        row = idx_ref[base + k]
-        return pltpu.make_async_copy(
-            table_hbm.at[pl.ds(row, 1), :], scratch.at[pl.ds(slot, 1), :],
-            sems.at[slot])
+    ring = RingChannel(
+        scratch, sems, rif,
+        src=lambda k: table_hbm.at[pl.ds(idx_ref[base + k], 1), :])
 
-    # prologue: fill the ring (issue min(rif, chunk) requests)
-    def _issue(k, _):
-        _copy(k, k % rif).start()
-        return 0
+    def execute(k, row):
+        pl.store(out_ref, (pl.ds(k, 1), slice(None)), row)
 
-    n_pro = min(rif, chunk)
-    jax.lax.fori_loop(0, n_pro, _issue, 0)
-
-    # steady state: wait k, consume k, issue k + rif
-    def _consume(k, _):
-        slot = k % rif
-        _copy(k, slot).wait()
-        val = scratch[pl.ds(slot, 1), :]
-        pl.store(out_ref, (pl.ds(k, 1), slice(None)), val)
-
-        @pl.when(k + rif < chunk)
-        def _():
-            _copy(k + rif, (k + rif) % rif).start()
-
-        return 0
-
-    jax.lax.fori_loop(0, chunk, _consume, 0)
+    access_execute([ring], chunk, execute)
 
 
 def gather_rif(table: jax.Array, idx: jax.Array, *, chunk: int = 64,
@@ -130,10 +115,7 @@ def gather_rif(table: jax.Array, idx: jax.Array, *, chunk: int = 64,
             grid=grid,
             in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
             out_specs=pl.BlockSpec((chunk, d), lambda c, idx_ref: (c, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((rif, d), table.dtype),
-                pltpu.SemaphoreType.DMA((rif,)),
-            ],
+            scratch_shapes=[*ring_scratch_shapes(rif, (1, d), table.dtype)],
         ),
         out_shape=jax.ShapeDtypeStruct((m, d), table.dtype),
         interpret=interpret,

@@ -17,8 +17,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import (cdiv, resolve_interpret, round_up,
-                                  tuned_knobs)
+from repro.kernels.common import (cdiv, resolve_interpret, ring_rif,
+                                  round_up, tuned_knobs)
 from repro.kernels.dae_gather import kernel as _k
 from repro.kernels.dae_gather.ref import gather_ref
 
@@ -86,12 +86,7 @@ def dae_gather(
                             rif=(rif, None))
         method, block_d, chunk = knobs["method"], knobs["block_d"], \
             knobs["chunk"]
-        rif = knobs["rif"]
-        if rif is None:  # analytic fallback: ring covers latency×BW
-            # deferred: repro.core.__init__ -> decouple -> this module
-            # would cycle on a top-level repro.core.pipeline import
-            from repro.core.pipeline import plan_rif
-            dp = round_up(max(d, 1), 128)
-            rif = plan_rif(chunk * dp * table.dtype.itemsize).rif
+        dp = round_up(max(d, 1), 128)
+        rif = ring_rif(knobs["rif"], chunk * dp * table.dtype.itemsize)
     return _dae_gather_impl(table, idx, method=method, block_d=block_d,
                             chunk=chunk, rif=rif, interpret=interp)

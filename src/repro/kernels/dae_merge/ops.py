@@ -9,8 +9,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import (cdiv, resolve_interpret, round_up,
-                                  tuned_knobs)
+from repro.kernels.common import (cdiv, resolve_interpret, ring_rif,
+                                  round_up, tuned_knobs)
 from repro.kernels.dae_merge import kernel as _k
 
 
@@ -55,8 +55,9 @@ def merge_path_splits(a: jax.Array, b: jax.Array, tile: int, n_tiles: int):
     return ia.astype(jnp.int32), ib.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret", "method"))
-def _merge_impl(a, b, *, tile, interpret, method):
+@functools.partial(jax.jit, static_argnames=("tile", "rif", "interpret",
+                                              "method"))
+def _merge_impl(a, b, *, tile, rif, interpret, method):
     n, m = a.shape[0], b.shape[0]
     total = n + m
     if method == "ref":
@@ -68,27 +69,32 @@ def _merge_impl(a, b, *, tile, interpret, method):
     a_pad = jnp.concatenate([a, jnp.full((tile,), big, a.dtype)])
     b_pad = jnp.concatenate([b, jnp.full((tile,), big, b.dtype)])
     out = _k.merge_tiles(a_pad, b_pad, ia, ib, n_tiles * tile, tile=tile,
-                         interpret=interpret)
+                         rif=rif, interpret=interpret)
     return out[:total]
 
 
 def merge_sorted(a: jax.Array, b: jax.Array, *, tile: Optional[int] = None,
-                 method: str = "pallas",
+                 rif: Optional[int] = None, method: str = "pallas",
                  interpret: Optional[bool] = None) -> jax.Array:
     """Merge two sorted 1-D arrays (decoupled merge-path kernel).
 
-    ``tile=None`` resolves via the tune cache (falling back to 256).
+    ``tile``/``rif`` left ``None`` resolve in the dispatch order
+    explicit → tune cache → analytic (tile 256; ``plan_rif`` sizes the
+    window ring from the tile's byte size).
     """
     if a.dtype != b.dtype:
         raise TypeError(f"dtype mismatch: {a.dtype} vs {b.dtype}")
     interpret = resolve_interpret(interpret)
-    if tile is None:
-        tile = tuned_knobs("dae_merge", (a.shape[0], b.shape[0]), a.dtype,
-                           interpret, tile=(None, 256))["tile"]
+    if tile is None or rif is None:
+        knobs = tuned_knobs("dae_merge", (a.shape[0], b.shape[0]), a.dtype,
+                            interpret, tile=(tile, 256), rif=(rif, None))
+        tile, rif = knobs["tile"], knobs["rif"]
     tile = min(tile, 1 << max(1, (a.shape[0] + b.shape[0] - 1).bit_length()))
     # tile must be a power of two for the bitonic network
     tile = 1 << (tile.bit_length() - 1)
-    return _merge_impl(a, b, tile=tile, interpret=interpret, method=method)
+    rif = ring_rif(rif, tile * a.dtype.itemsize)
+    return _merge_impl(a, b, tile=tile, rif=rif, interpret=interpret,
+                       method=method)
 
 
 def merge_sort(x: jax.Array, *, tile: int = 256, method: str = "pallas",

@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import (cdiv, resolve_interpret, round_up,
-                                  tuned_knobs)
+from repro.kernels.common import (cdiv, resolve_interpret, ring_rif,
+                                  round_up, tuned_knobs)
 from repro.kernels.dae_spmv import kernel as _k
 from repro.kernels.dae_spmv.ref import bsr_spmv_ref
 
@@ -56,30 +56,40 @@ def csr_to_bsr(rows: np.ndarray, cols: np.ndarray, val: np.ndarray,
     return val_blocks, row_ids, col_ids, nkb * bk, nrb
 
 
-@functools.partial(jax.jit, static_argnames=("nrows_blocks", "interpret", "method"))
+@functools.partial(jax.jit, static_argnames=("nrows_blocks", "rif",
+                                              "interpret", "method"))
 def _spmv_impl(val_blocks, row_ids, col_ids, vec_tiles, *, nrows_blocks,
-               interpret, method):
+               rif, interpret, method):
     if method == "ref":
         return bsr_spmv_ref(val_blocks, row_ids, col_ids, vec_tiles,
                             nrows_blocks)
     return _k.bsr_spmv(val_blocks, row_ids, col_ids, vec_tiles,
-                       nrows_blocks, interpret=interpret)
+                       nrows_blocks, rif=rif, interpret=interpret)
 
 
 def dae_spmv(val_blocks: jax.Array, row_ids: jax.Array, col_ids: jax.Array,
-             vec: jax.Array, nrows_blocks: int, *, method: str = "pallas",
+             vec: jax.Array, nrows_blocks: int, *, rif: Optional[int] = None,
+             method: str = "pallas",
              interpret: Optional[bool] = None) -> jax.Array:
     """BSR matvec: returns (nrows_blocks * BM,) flattened result.
 
-    ``vec`` is the dense vector, padded here to a multiple of BK and tiled.
+    ``vec`` is the dense vector, padded here to a multiple of BK and
+    tiled.  ``rif=None`` resolves the vec-tile ring depth via the tune
+    cache, then ``plan_rif`` over one tile's byte size.
     """
     nb, bm, bk = val_blocks.shape
+    interp = resolve_interpret(interpret)
+    if rif is None:
+        rif = tuned_knobs("dae_spmv", (nrows_blocks * bm, vec.shape[0], nb),
+                          val_blocks.dtype, interp,
+                          rif=(None, None))["rif"]
+        rif = ring_rif(rif, bk * val_blocks.dtype.itemsize)
     kp = round_up(vec.shape[0], bk)
     if kp != vec.shape[0]:
         vec = jnp.pad(vec, (0, kp - vec.shape[0]))
     vec_tiles = vec.reshape(-1, bk)
     out = _spmv_impl(val_blocks, row_ids.astype(jnp.int32),
                      col_ids.astype(jnp.int32), vec_tiles,
-                     nrows_blocks=nrows_blocks,
-                     interpret=resolve_interpret(interpret), method=method)
+                     nrows_blocks=nrows_blocks, rif=rif,
+                     interpret=interp, method=method)
     return out.reshape(-1)

@@ -1,18 +1,23 @@
 """Block-streamed flash attention — decoupled KV fetch on TPU.
 
-The DAE view (DESIGN.md §2): the KV block stream is the *Access* side —
-the Pallas pipeline issues the HBM→VMEM copy for block k+1 while the MXU
-consumes block k (decoupled request/response with the buffer ring as the
-RIF window).  Online softmax is the Execute loop's bounded state, the
-same role as Listing 4's ``state`` stream.
+The DAE view (docs/architecture.md §"TPU adaptation"): the KV block
+stream is the *Access* side — the request for block k+rif is issued
+while the MXU consumes block k (decoupled request/response with the
+buffer ring as the RIF window).  Online softmax is the Execute loop's
+bounded state, the same role as Listing 4's ``state`` stream.
 
 Variants:
   * ``flash`` — prefill: causal / sliding-window, GQA via head mapping.
+    The KV stream is regular, so the Pallas pipeline's own BlockSpec
+    double-buffering is the ring (RIF = 2).
   * ``flash_decode`` — one new token against a KV cache; the q-head
-    group of a KV head is folded into MXU rows.
-  * paged decode — the page table is scalar-prefetched and drives the
-    K/V BlockSpec index_map: an irregular, data-dependent block gather
-    (exactly ``dae_gather`` fused into attention).
+    group of a KV head is folded into MXU rows.  The K/V block streams
+    are two explicit :class:`~repro.kernels.ring.RingChannel`\\ s of
+    depth ``rif`` spanning the ``nk`` grid dimension
+    (:func:`~repro.kernels.ring.ring_step`).
+  * paged decode — same rings, but the scalar-prefetched page table
+    supplies the block addresses: an irregular, data-dependent block
+    gather (exactly ``dae_gather`` fused into attention).
 """
 
 from __future__ import annotations
@@ -24,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ring import RingChannel, ring_scratch_shapes, ring_step
 
 NEG_INF = -1e30
 
@@ -110,8 +117,10 @@ def flash(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
 # ---------------------------------------------------------------------------
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
-                   bk: int, nk: int, scale: float):
+def _decode_step(len_ref, q_ref, o_ref, acc, m_s, l_s, k_blk, v_blk, *,
+                 bk: int, nk: int, scale: float):
+    """Online-softmax update for one (BK, D) K/V block pair — the Execute
+    side shared by the contiguous and paged decode kernels."""
     b = pl.program_id(0)
     ki = pl.program_id(2)
 
@@ -122,8 +131,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
         l_s[...] = jnp.zeros_like(l_s)
 
     q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
-    k = k_ref[0, 0].astype(jnp.float32)              # (BK, D)
-    v = v_ref[0, 0].astype(jnp.float32)
+    k = k_blk.astype(jnp.float32)                    # (BK, D)
+    v = v_blk.astype(jnp.float32)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -144,16 +153,37 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
         o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _decode_kernel(len_ref, q_ref, k_hbm, v_hbm, o_ref, acc, m_s, l_s,
+                   kscr, ksem, vscr, vsem, *, bk: int, nk: int, rif: int,
+                   scale: float):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    ki = pl.program_id(2)
+    ring_k = RingChannel(kscr, ksem, rif,
+                         src=lambda k: k_hbm.at[b, h, pl.ds(k * bk, bk), :])
+    ring_v = RingChannel(vscr, vsem, rif,
+                         src=lambda k: v_hbm.at[b, h, pl.ds(k * bk, bk), :])
+
+    def execute(k_blk, v_blk):
+        _decode_step(len_ref, q_ref, o_ref, acc, m_s, l_s, k_blk, v_blk,
+                     bk=bk, nk=nk, scale=scale)
+
+    ring_step([ring_k, ring_v], ki, nk, execute)
+
+
 def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                 lengths: jax.Array, *, scale: float, bk: int,
+                 lengths: jax.Array, *, scale: float, bk: int, rif: int = 2,
                  interpret: bool = True) -> jax.Array:
-    """q (B, KVH, G, D); caches (B, KVH, S, D); lengths (B,) int32."""
+    """q (B, KVH, G, D); caches (B, KVH, S, D); lengths (B,) int32.
+    ``rif`` K/V block pairs stream ahead of the MXU consume."""
     b, kvh, g, d = q.shape
     s = k_cache.shape[2]
     nk = s // bk
+    rif = max(1, min(rif, nk))
     grid = (b, kvh, nk)
 
-    kernel = functools.partial(_decode_kernel, bk=bk, nk=nk, scale=scale)
+    kernel = functools.partial(_decode_kernel, bk=bk, nk=nk, rif=rif,
+                               scale=scale)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -161,8 +191,8 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 1, g, d), lambda b_, h_, k_, L: (b_, h_, 0, 0)),
-                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, k_, L: (b_, h_, k_, 0)),
-                pl.BlockSpec((1, 1, bk, d), lambda b_, h_, k_, L: (b_, h_, k_, 0)),
+                pl.BlockSpec(memory_space=pl.ANY),
+                pl.BlockSpec(memory_space=pl.ANY),
             ],
             out_specs=pl.BlockSpec((1, 1, g, d),
                                    lambda b_, h_, k_, L: (b_, h_, 0, 0)),
@@ -170,6 +200,8 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                 pltpu.VMEM((g, d), jnp.float32),
                 pltpu.VMEM((g, 1), jnp.float32),
                 pltpu.VMEM((g, 1), jnp.float32),
+                *ring_scratch_shapes(rif, (bk, d), k_cache.dtype),
+                *ring_scratch_shapes(rif, (bk, d), v_cache.dtype),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
@@ -177,29 +209,44 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     )(lengths, q, k_cache, v_cache)
 
 
-def _paged_decode_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
-                         acc, m_s, l_s, *, bk: int, nk: int, scale: float):
-    # identical math to _decode_kernel; the paging happens in the BlockSpec
-    _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s,
-                   bk=bk, nk=nk, scale=scale)
+def _paged_decode_kernel(len_ref, pt_ref, q_ref, k_hbm, v_hbm, o_ref,
+                         acc, m_s, l_s, kscr, ksem, vscr, vsem, *, bk: int,
+                         nk: int, rif: int, scale: float):
+    # identical math to _decode_kernel; the scalar-prefetched page table
+    # supplies the ring's addresses (the decoupled request stream)
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    ki = pl.program_id(2)
+    ring_k = RingChannel(kscr, ksem, rif,
+                         src=lambda k: k_hbm.at[pt_ref[b, k], h])
+    ring_v = RingChannel(vscr, vsem, rif,
+                         src=lambda k: v_hbm.at[pt_ref[b, k], h])
+
+    def execute(k_blk, v_blk):
+        _decode_step(len_ref, q_ref, o_ref, acc, m_s, l_s, k_blk, v_blk,
+                     bk=bk, nk=nk, scale=scale)
+
+    ring_step([ring_k, ring_v], ki, nk, execute)
 
 
 def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                        page_table: jax.Array, lengths: jax.Array, *,
-                       scale: float, interpret: bool = True) -> jax.Array:
+                       scale: float, rif: int = 2,
+                       interpret: bool = True) -> jax.Array:
     """q (B, KVH, G, D); pages (NP, KVH, PAGE, D); page_table (B, S/PAGE).
 
-    The page table is the decoupled request stream: the K/V index_maps
-    consume it ahead of the MXU — a data-dependent block gather fused
-    into attention (dae_gather's addressing inside flash).
+    The page table is the decoupled request stream: the K/V rings consume
+    it ahead of the MXU — a data-dependent block gather fused into
+    attention (dae_gather's addressing inside flash).
     """
     b, kvh, g, d = q.shape
     n_pages, _, page, _ = k_pages.shape
     npb = page_table.shape[1]
+    rif = max(1, min(rif, npb))
     grid = (b, kvh, npb)
 
     kernel = functools.partial(_paged_decode_kernel, bk=page, nk=npb,
-                               scale=scale)
+                               rif=rif, scale=scale)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -207,10 +254,8 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 1, g, d), lambda b_, h_, k_, L, pt: (b_, h_, 0, 0)),
-                pl.BlockSpec((1, 1, page, d),
-                             lambda b_, h_, k_, L, pt: (pt[b_, k_], h_, 0, 0)),
-                pl.BlockSpec((1, 1, page, d),
-                             lambda b_, h_, k_, L, pt: (pt[b_, k_], h_, 0, 0)),
+                pl.BlockSpec(memory_space=pl.ANY),
+                pl.BlockSpec(memory_space=pl.ANY),
             ],
             out_specs=pl.BlockSpec((1, 1, g, d),
                                    lambda b_, h_, k_, L, pt: (b_, h_, 0, 0)),
@@ -218,6 +263,8 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                 pltpu.VMEM((g, d), jnp.float32),
                 pltpu.VMEM((g, 1), jnp.float32),
                 pltpu.VMEM((g, 1), jnp.float32),
+                *ring_scratch_shapes(rif, (page, d), k_pages.dtype),
+                *ring_scratch_shapes(rif, (page, d), v_pages.dtype),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),

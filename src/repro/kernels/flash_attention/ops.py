@@ -8,8 +8,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import (cdiv, resolve_interpret, round_up,
-                                  tuned_knobs)
+from repro.kernels.common import (cdiv, resolve_interpret, ring_rif,
+                                  round_up, tuned_knobs)
 from repro.kernels.flash_attention import kernel as _k
 from repro.kernels.flash_attention.ref import attention_ref, decode_ref
 
@@ -53,8 +53,9 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        interpret=interp, method=method)
 
 
-@functools.partial(jax.jit, static_argnames=("bk", "interpret", "method"))
-def _decode_impl(q, k_cache, v_cache, lengths, *, bk, interpret, method):
+@functools.partial(jax.jit, static_argnames=("bk", "rif", "interpret",
+                                              "method"))
+def _decode_impl(q, k_cache, v_cache, lengths, *, bk, rif, interpret, method):
     b, h, d = q.shape
     kvh, s = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh
@@ -68,22 +69,32 @@ def _decode_impl(q, k_cache, v_cache, lengths, *, bk, interpret, method):
         v_cache = jnp.pad(v_cache, pad)
     qg = q.reshape(b, kvh, g, d)
     out = _k.flash_decode(qg, k_cache, v_cache, lengths.astype(jnp.int32),
-                          scale=scale, bk=bk, interpret=interpret)
+                          scale=scale, bk=bk, rif=rif, interpret=interpret)
     return out.reshape(b, h, d)
 
 
 def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                 lengths: jax.Array, *, bk: int = 128,
-                 method: str = "pallas",
+                 lengths: jax.Array, *, bk: Optional[int] = None,
+                 rif: Optional[int] = None, method: str = "pallas",
                  interpret: Optional[bool] = None) -> jax.Array:
-    """One-token decode: q (B,H,D) against caches (B,KVH,S,D)."""
-    return _decode_impl(q, k_cache, v_cache, lengths, bk=bk,
-                        interpret=resolve_interpret(interpret), method=method)
+    """One-token decode: q (B,H,D) against caches (B,KVH,S,D).
+
+    ``bk``/``rif`` left ``None`` resolve explicit → tune cache →
+    analytic (bk 128; ``plan_rif`` over one (bk, d) block's byte
+    size)."""
+    interp = resolve_interpret(interpret)
+    if bk is None or rif is None:
+        knobs = tuned_knobs("flash_decode", (k_cache.shape[2], q.shape[2]),
+                            q.dtype, interp, bk=(bk, 128), rif=(rif, None))
+        bk, rif = knobs["bk"], knobs["rif"]
+        rif = ring_rif(rif, bk * q.shape[2] * q.dtype.itemsize)
+    return _decode_impl(q, k_cache, v_cache, lengths, bk=bk, rif=rif,
+                        interpret=interp, method=method)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "method"))
+@functools.partial(jax.jit, static_argnames=("rif", "interpret", "method"))
 def _decode_paged_impl(q, k_pages, v_pages, page_table, lengths, *,
-                       interpret, method):
+                       rif, interpret, method):
     b, h, d = q.shape
     kvh = k_pages.shape[1]
     g = h // kvh
@@ -100,14 +111,23 @@ def _decode_paged_impl(q, k_pages, v_pages, page_table, lengths, *,
     out = _k.flash_decode_paged(qg, k_pages, v_pages,
                                 page_table.astype(jnp.int32),
                                 lengths.astype(jnp.int32), scale=scale,
-                                interpret=interpret)
+                                rif=rif, interpret=interpret)
     return out.reshape(b, h, d)
 
 
 def flash_decode_paged(q, k_pages, v_pages, page_table, lengths, *,
-                       method: str = "pallas",
+                       rif: Optional[int] = None, method: str = "pallas",
                        interpret: Optional[bool] = None) -> jax.Array:
-    """Paged decode: pages (NP,KVH,PAGE,D), page_table (B, S/PAGE) int32."""
+    """Paged decode: pages (NP,KVH,PAGE,D), page_table (B, S/PAGE) int32.
+
+    ``rif=None`` resolves the page-ring depth via the tune cache, then
+    ``plan_rif`` over one page's byte size."""
+    interp = resolve_interpret(interpret)
+    if rif is None:
+        rif = tuned_knobs("flash_decode_paged",
+                          (k_pages.shape[2], q.shape[2]), q.dtype, interp,
+                          rif=(None, None))["rif"]
+        rif = ring_rif(rif, k_pages.shape[2] * q.shape[2]
+                       * q.dtype.itemsize)
     return _decode_paged_impl(q, k_pages, v_pages, page_table, lengths,
-                              interpret=resolve_interpret(interpret),
-                              method=method)
+                              rif=rif, interpret=interp, method=method)

@@ -1,0 +1,182 @@
+"""The shared explicit-decoupling emitter for Pallas TPU kernels.
+
+This module is the TPU-side twin of the simulator's programming model in
+:mod:`repro.core.dae` (paper §3): one place that knows how to emit the
+Listing-4 ring — a ``rif``-deep rotating VMEM scratch with per-slot DMA
+semaphores — so individual kernels declare *what* they fetch, not *how*
+the prologue/steady-state/drain loops are shaped.
+
+Vocabulary map (simulator IR ↔ TPU emitter):
+
+  ====================  =========================================
+  ``decouple_request``  :meth:`RingChannel.request` (async start)
+  ``decouple_response`` :meth:`RingChannel.response` (wait + read)
+  channel capacity      the ring depth ``rif``
+  Access loop           the request stream (prologue + reissues)
+  Execute loop          the ``execute`` callback
+  ====================  =========================================
+
+The paper's §5.1 conservation rules hold *structurally*: the two loop
+scaffolds below issue exactly one :meth:`~RingChannel.request` and one
+:meth:`~RingChannel.response` per sequence index ``k`` in ``[0, n)``
+(requests never run more than ``rif`` ahead of responses, so capacity
+is bounded by construction — the deadlock-freedom argument of §5.4).
+Both scaffolds generate the same three-phase structure:
+
+  * **prologue** — fill the ring: request ``k = 0 .. min(rif, n)``;
+  * **steady state** — for each ``k``: wait ``k``, consume it, request
+    ``k + rif`` (the Access loop running ``rif`` ahead of Execute);
+  * **drain** — implicit: no request is issued for ``k + rif >= n``,
+    so the last ``min(rif, n)`` responses empty the ring.
+
+Two emission forms cover every kernel in ``repro.kernels``:
+
+  * :func:`access_execute` — the whole loop lives inside one grid step
+    (``fori_loop``); used when a grid step owns a *chunk* of the request
+    stream (``dae_gather``'s explicit-RIF variant, both ``dae_chase``
+    kernels).
+  * :func:`ring_step` — the loop spans grid steps along the innermost
+    grid dimension; Pallas TPU scratch persists across grid iterations,
+    so step ``i`` waits on the copy that step ``i - rif`` started
+    (``dae_merge``, ``dae_spmv``'s vec-tile fetch, ``flash_decode``'s
+    K/V streams).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence, Tuple
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["RingChannel", "ring_scratch_shapes", "access_execute",
+           "ring_step"]
+
+
+def ring_scratch_shapes(rif: int, item_shape: Tuple[int, ...], dtype
+                        ) -> Tuple[Any, Any]:
+    """The ``scratch_shapes`` pair backing one :class:`RingChannel`:
+    a ``(rif, *item_shape)`` VMEM ring plus its per-slot DMA semaphores.
+    Unpack into ``pl.pallas_call``'s ``scratch_shapes`` list."""
+    if rif < 1:
+        raise ValueError(f"ring depth must be >= 1, got rif={rif}")
+    return (pltpu.VMEM((rif, *item_shape), dtype),
+            pltpu.SemaphoreType.DMA((rif,)))
+
+
+@dataclasses.dataclass(frozen=True)
+class RingChannel:
+    """A capacity-``rif`` decoupled-load channel inside a kernel body.
+
+    ``scratch``/``sems`` are the kernel refs allocated via
+    :func:`ring_scratch_shapes`; ``src`` maps a sequence index ``k`` to
+    the HBM ref slice to fetch (the Access loop's address stream — e.g.
+    a scalar-prefetched index, a merge-path split, or a pointer read
+    back out of kernel state).  ``src(k)`` must return a ref of exactly
+    ``scratch.shape[1:]``.
+
+    ``request``/``response`` map 1:1 onto the paper's
+    ``decouple_request``/``decouple_response``: a request starts the
+    async HBM→VMEM copy into slot ``k % rif``, a response waits on that
+    slot's semaphore and returns the landed value.  Because the wait
+    rebuilds the same copy descriptor, a response cannot be paired with
+    any request but ``k``'s — the §5.1 one-request/one-response rule is
+    not a convention here, it is the only thing the API can express.
+    """
+
+    scratch: Any
+    sems: Any
+    rif: int
+    src: Callable[[Any], Any]
+
+    def __post_init__(self) -> None:
+        depth = self.scratch.shape[0]
+        if depth != self.rif:
+            raise ValueError(
+                f"ring scratch holds {depth} slots but rif={self.rif}; "
+                f"allocate via ring_scratch_shapes(rif, ...)")
+
+    def slot(self, k: Any) -> Any:
+        return jax.lax.rem(k, self.rif)
+
+    def _copy(self, k: Any):
+        s = self.slot(k)
+        return pltpu.make_async_copy(self.src(k), self.scratch.at[s],
+                                     self.sems.at[s])
+
+    def request(self, k: Any) -> None:
+        """``decouple_request``: start the async copy for index ``k``."""
+        self._copy(k).start()
+
+    def response(self, k: Any) -> Any:
+        """``decouple_response``: wait for index ``k``'s copy and return
+        the landed value (shape ``scratch.shape[1:]``)."""
+        self._copy(k).wait()
+        return self.scratch[self.slot(k)]
+
+
+def _prologue(rings: Sequence[RingChannel], n: int) -> None:
+    for r in rings:
+        def issue(k, _, r=r):
+            r.request(k)
+            return 0
+        jax.lax.fori_loop(0, min(r.rif, n), issue, 0)
+
+
+def _reissue(rings: Sequence[RingChannel], k: Any, n: int) -> None:
+    for r in rings:
+        @pl.when(k + r.rif < n)
+        def _(r=r):
+            r.request(k + r.rif)
+
+
+def access_execute(rings: Sequence[RingChannel], n: int,
+                   execute: Callable[..., None]) -> None:
+    """Emit a complete access/execute loop over ``n`` sequence indices
+    inside the current grid step.
+
+    ``execute(k, *values)`` receives one landed value per ring, in ring
+    order, after every ring's response for ``k``; requests for
+    ``k + rif`` are issued *after* ``execute`` returns, so an execute
+    that writes the address state consumed by ``src`` (the dependent-
+    load pattern of ``dae_chase``) observes its own updates exactly one
+    ring-depth later — the same ordering the simulator's round-robin
+    chase scheduler guarantees.
+    """
+    rings = tuple(rings)
+    _prologue(rings, n)
+
+    def consume(k, _):
+        vals = tuple(r.response(k) for r in rings)
+        execute(k, *vals)
+        _reissue(rings, k, n)
+        return 0
+
+    jax.lax.fori_loop(0, n, consume, 0)
+
+
+def ring_step(rings: Sequence[RingChannel], i: Any, n: int,
+              execute: Callable[..., None]) -> None:
+    """Emit one grid step of an access/execute loop that spans the
+    innermost grid dimension: call with ``i = pl.program_id(innermost)``
+    and ``n`` = that dimension's extent.
+
+    Relies on Pallas TPU semantics: scratch (and therefore the ring and
+    its semaphores) persists across grid iterations, so the copy started
+    here for ``i + rif`` is the one step ``i + rif`` waits on.  When the
+    innermost dimension restarts (an outer grid index advanced), ``i``
+    is 0 again and the prologue refills the ring — the previous
+    sequence's requests were fully drained because no request is ever
+    issued for an index ``>= n``.
+    """
+    rings = tuple(rings)
+
+    @pl.when(i == 0)
+    def _():
+        _prologue(rings, n)
+
+    vals = tuple(r.response(i) for r in rings)
+    execute(*vals)
+    _reissue(rings, i, n)

@@ -121,7 +121,8 @@ def cell_should_run(arch: str, shape: InputShape) -> bool:
 
 def skip_reason(arch: str, shape: InputShape) -> str:
     return ("long_500k needs sub-quadratic attention; this arch is pure "
-            "full-attention (DESIGN.md §5)")
+            "full-attention (docs/architecture.md §\"Model families and "
+            "input shapes\")")
 
 
 def build_cell(cfg: ModelConfig, shape: InputShape, mesh):

@@ -6,7 +6,8 @@ Both run in three modes:
   * cross-attention (encoder-decoder).
 
 The KV block stream of the flash kernel is the decoupled-load path
-(DESIGN.md §4.2); MLA caches the *compressed latent* so the decoupled
+(docs/architecture.md §"TPU adaptation"); MLA caches the *compressed
+latent* so the decoupled
 fetch reads kv_lora_rank + rope_dim bytes per token instead of
 2 * KVH * head_dim.
 """

@@ -2,7 +2,8 @@
 
 Attention-free: the WKV state is a per-head (hd × hd) matrix updated
 recurrently — O(S) time, O(1) state — so long_500k decode runs with a
-constant-size state (DESIGN.md §5).  Structure follows arXiv:2404.05892
+constant-size state (docs/architecture.md §"Model families and input
+shapes").  Structure follows arXiv:2404.05892
 (data-dependent decay via a LoRA on w; token-shift mixes), with the
 low-rank mix interpolation simplified to per-channel static mixes.
 """

@@ -37,8 +37,11 @@ KERNEL_DIMS: Dict[str, Tuple[int, ...]] = {
     "dae_gather": (2048, 256, 512),          # (n, d, m)
     "dae_merge": (2048, 2048),               # (n, m)
     "flash_attention": (256, 256, 64),       # (sq, sk, d_head)
+    "flash_decode": (512, 64),               # (cache len, d_head)
+    "flash_decode_paged": (64, 64),          # (page, d_head)
     "grouped_matmul": (256, 256, 256),       # (t, d, f)
     "batched_searchsorted": (4096, 256),     # (n, m)
+    "hash_lookup": (4096, 256),              # (n entries, m keys)
     "dae_spmv": (256, 4096, 4096),           # (nrows, ncols, nnz)
 }
 
@@ -96,8 +99,9 @@ def _merge_measure(dims, interpret, reps):
 
     def measure(cfg: Config) -> float:
         return time_callable(
-            lambda: merge_sorted(a, b, tile=cfg["tile"], interpret=interpret),
-            reps)
+            lambda: merge_sorted(a, b, tile=cfg["tile"],
+                                 rif=cfg.get("rif", 2),
+                                 interpret=interpret), reps)
 
     return measure, (n, m), "float32"
 
@@ -117,6 +121,50 @@ def _flash_measure(dims, interpret, reps):
                                     interpret=interpret), reps)
 
     return measure, (sq, sk, d), "float32"
+
+
+def _flash_decode_measure(dims, interpret, reps):
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_decode
+    s, d = dims
+    b, kvh, g = 2, 2, 4
+    r = np.random.default_rng(0)
+    q = jnp.asarray(r.standard_normal((b, kvh * g, d)), jnp.float32)
+    kc = jnp.asarray(r.standard_normal((b, kvh, s, d)), jnp.float32)
+    vc = jnp.asarray(r.standard_normal((b, kvh, s, d)), jnp.float32)
+    lens = jnp.asarray([s // 2, s], jnp.int32)
+
+    def measure(cfg: Config) -> float:
+        return time_callable(
+            lambda: flash_decode(q, kc, vc, lens, bk=cfg["bk"],
+                                 rif=cfg.get("rif", 2),
+                                 interpret=interpret), reps)
+
+    return measure, (s, d), "float32"
+
+
+def _flash_decode_paged_measure(dims, interpret, reps):
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.ops import flash_decode_paged
+    page, d = dims
+    b, kvh, g, npb = 2, 2, 4, 4
+    s = npb * page
+    r = np.random.default_rng(0)
+    q = jnp.asarray(r.standard_normal((b, kvh * g, d)), jnp.float32)
+    kc = r.standard_normal((b, kvh, s, d)).astype(np.float32)
+    kp = jnp.asarray(kc.transpose(0, 2, 1, 3)
+                     .reshape(b * npb, page, kvh, d).transpose(0, 2, 1, 3))
+    vp = kp + 1.0
+    pt = jnp.arange(b * npb, dtype=jnp.int32).reshape(b, npb)
+    lens = jnp.asarray([s // 2, s], jnp.int32)
+
+    def measure(cfg: Config) -> float:
+        return time_callable(
+            lambda: flash_decode_paged(q, kp, vp, pt, lens,
+                                       rif=cfg.get("rif", 2),
+                                       interpret=interpret), reps)
+
+    return measure, (page, d), "float32"
 
 
 def _gmm_measure(dims, interpret, reps):
@@ -148,7 +196,32 @@ def _searchsorted_measure(dims, interpret, reps):
     def measure(cfg: Config) -> float:
         return time_callable(
             lambda: batched_searchsorted(table, keys, block=cfg["block"],
+                                         chunk=cfg.get("chunk", 64),
+                                         rif=cfg.get("rif", 8),
                                          interpret=interpret), reps)
+
+    return measure, (n, m), "int32"
+
+
+def _hash_measure(dims, interpret, reps):
+    import jax.numpy as jnp
+    from repro.kernels.dae_chase import hash_lookup
+    n, m = dims
+    chain = 8
+    r = np.random.default_rng(0)
+    ek = jnp.asarray(np.arange(n), jnp.int32)
+    ev = jnp.asarray(r.integers(0, 1 << 20, n), jnp.int32)
+    en = jnp.asarray([(i + 1) if (i + 1) % chain else -1 for i in range(n)],
+                     jnp.int32)
+    heads = jnp.asarray(r.integers(0, n // chain, m) * chain, jnp.int32)
+    keys = heads + jnp.asarray(r.integers(0, chain, m), jnp.int32)
+
+    def measure(cfg: Config) -> float:
+        return time_callable(
+            lambda: hash_lookup(ek, ev, en, heads, keys, max_steps=chain,
+                                chunk=cfg.get("chunk", 64),
+                                rif=cfg.get("rif", 8),
+                                interpret=interpret), reps)
 
     return measure, (n, m), "int32"
 
@@ -172,7 +245,8 @@ def _spmv_measure(dims, interpret, reps):
                                         bm=cfg["bm"], bk=cfg["bk"])
         vbj, rij, cij = jnp.asarray(vb), jnp.asarray(ri), jnp.asarray(ci)
         return time_callable(
-            lambda: dae_spmv(vbj, rij, cij, vec, nrb, interpret=interpret),
+            lambda: dae_spmv(vbj, rij, cij, vec, nrb,
+                             rif=cfg.get("rif", 2), interpret=interpret),
             reps)
 
     return measure, (nrows, ncols, nnz), "float32"
@@ -182,8 +256,11 @@ _KERNEL_MEASURES = {
     "dae_gather": _gather_measure,
     "dae_merge": _merge_measure,
     "flash_attention": _flash_measure,
+    "flash_decode": _flash_decode_measure,
+    "flash_decode_paged": _flash_decode_paged_measure,
     "grouped_matmul": _gmm_measure,
     "batched_searchsorted": _searchsorted_measure,
+    "hash_lookup": _hash_measure,
     "dae_spmv": _spmv_measure,
 }
 

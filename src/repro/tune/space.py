@@ -126,7 +126,11 @@ def _gather_space(n: int, d: int, m: int, itemsize: int = 4) -> SearchSpace:
 
 def _merge_space(n: int, m: int) -> SearchSpace:
     tiles = tuple(t for t in _pow2_range(64, 1024) if t <= max(64, n + m))
-    return _snapped(SearchSpace("dae_merge", {"tile": tiles}, {"tile": 256}))
+    plan = plan_rif(256 * 4)
+    return _snapped(SearchSpace("dae_merge", {
+        "tile": tiles,
+        "rif": _pow2_range(1, 16),
+    }, {"tile": 256, "rif": plan.rif}))
 
 
 def _flash_space(sq: int, sk: int, d: int) -> SearchSpace:
@@ -134,6 +138,25 @@ def _flash_space(sq: int, sk: int, d: int) -> SearchSpace:
     bks = tuple(b for b in (128, 256, 512) if b <= max(128, sk))
     return _snapped(SearchSpace("flash_attention", {"bq": bqs, "bk": bks},
                                 {"bq": 128, "bk": 128}))
+
+
+def _flash_decode_space(s: int, d: int) -> SearchSpace:
+    """Decode K/V block stream: block size plus the K/V ring depth."""
+    bks = tuple(b for b in (64, 128, 256) if b <= max(64, s))
+    plan = plan_rif(128 * max(d, 1) * 4)
+    return _snapped(SearchSpace("flash_decode", {
+        "bk": bks,
+        "rif": _pow2_range(1, 16),
+    }, {"bk": 128, "rif": plan.rif}))
+
+
+def _flash_decode_paged_space(page: int, d: int) -> SearchSpace:
+    """Paged decode: the page size is fixed by the cache layout, so only
+    the page-ring depth is searchable."""
+    plan = plan_rif(max(page, 1) * max(d, 1) * 4)
+    return _snapped(SearchSpace("flash_decode_paged", {
+        "rif": _pow2_range(1, 16),
+    }, {"rif": plan.rif}))
 
 
 def _gmm_space(t: int, d: int, f: int) -> SearchSpace:
@@ -144,25 +167,48 @@ def _gmm_space(t: int, d: int, f: int) -> SearchSpace:
 
 
 def _searchsorted_space(n: int, m: int) -> SearchSpace:
+    """Decoupled block binary search: probe block size plus the keys-
+    per-grid-step chunk and the probe-ring depth (§4.2's RIF)."""
     blocks = tuple(b for b in (64, 128, 256, 512) if b <= max(64, n))
-    return _snapped(SearchSpace("batched_searchsorted", {"block": blocks},
-                                {"block": 128}))
+    chunks = tuple(c for c in _pow2_range(16, 256) if c <= max(16, m))
+    plan = plan_rif(128 * 4)
+    return _snapped(SearchSpace("batched_searchsorted", {
+        "block": blocks,
+        "chunk": chunks,
+        "rif": _pow2_range(1, 64),
+    }, {"block": 128, "chunk": 64, "rif": plan.rif}))
+
+
+def _hash_lookup_space(n: int, m: int) -> SearchSpace:
+    """Lock-step chain walk: chains per grid step and chains in flight
+    (the paper's central knob for the hashtable benchmark)."""
+    chunks = tuple(c for c in _pow2_range(16, 256) if c <= max(16, m))
+    plan = plan_rif(128 * 4)
+    return _snapped(SearchSpace("hash_lookup", {
+        "chunk": chunks,
+        "rif": _pow2_range(1, 64),
+    }, {"chunk": 64, "rif": plan.rif}))
 
 
 def _spmv_space(nrows: int, ncols: int, nnz: int) -> SearchSpace:
-    """BSR block shape (conversion-time knob consulted by csr_to_bsr)."""
+    """BSR block shape (conversion-time knob consulted by csr_to_bsr)
+    plus the vec-tile ring depth of the matvec kernel."""
     return _snapped(SearchSpace("dae_spmv", {
         "bm": (8, 16, 32),
         "bk": (128, 256),
-    }, {"bm": 8, "bk": 128}))
+        "rif": _pow2_range(1, 16),
+    }, {"bm": 8, "bk": 128, "rif": 2}))
 
 
 KERNEL_SPACES = {
     "dae_gather": _gather_space,
     "dae_merge": _merge_space,
     "flash_attention": _flash_space,
+    "flash_decode": _flash_decode_space,
+    "flash_decode_paged": _flash_decode_paged_space,
     "grouped_matmul": _gmm_space,
     "batched_searchsorted": _searchsorted_space,
+    "hash_lookup": _hash_lookup_space,
     "dae_spmv": _spmv_space,
 }
 

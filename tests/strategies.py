@@ -1,9 +1,12 @@
-"""Randomized DaeProgram generation shared by the differential-parity
-harness (test_parity.py) and the property tests (test_properties.py).
+"""Randomized inputs shared by the test suites: DaeProgram specs for the
+differential-parity harness (test_parity.py) and the property tests
+(test_properties.py), plus shape/dtype/rif case strategies for the
+ring-emitter kernel differential tests (test_ring_kernels.py).
 
-Programs are generated as *specs* — plain dicts of op lists — because a
-DaeProgram holds live generators that a simulation consumes; a spec can
-be instantiated freshly for each engine run of a differential pair.
+Programs are generated as *specs* — plain dicts of op lists — so a spec
+can be instantiated freshly for each engine run of a differential pair
+(``build_program`` hands :class:`Process` generator *factories*, so the
+built programs are also rebuildable/validatable in place).
 
 The generator covers the scheduling-interleaving space: random channel
 topologies (load + stream, shared producer/consumer processes), random
@@ -175,7 +178,7 @@ def build_program(spec: Dict[str, Any], name: str = "rand"
                     last = yield effect_of(op, last)
                 else:
                     yield effect_of(op, last)
-        return gen()
+        return gen  # a factory: the built Process is rebuildable
 
     procs = [Process(f"p{pi}", make_gen(p["ops"]), ii=p["ii"])
              for pi, p in enumerate(spec["procs"])]
@@ -216,3 +219,81 @@ if st is not None:
         """Hypothesis strategy: a random program spec (shrinks by seed)."""
         return st.integers(min_value=0, max_value=2**31 - 1).map(
             lambda seed: random_spec(random.Random(seed)))
+
+    # -- ring-emitter kernel cases -----------------------------------------
+    #
+    # Shapes are kept small (every example runs a Pallas kernel in
+    # interpret mode) but deliberately cover the ring's edge regimes:
+    # rif=1 (a fully serialized ring), rif > chunk/tiles (prologue
+    # clamped by the item count), and non-multiple tails (dispatcher
+    # padding must not leak into results).
+
+    def _rifs():
+        return st.sampled_from((1, 2, 3, 8, 64))
+
+    def float_dtypes():
+        return st.sampled_from(("float32", "bfloat16"))
+
+    def gather_cases():
+        """(n, d, m, chunk, rif, dtype) for dae_gather method='rif'."""
+        return st.fixed_dictionaries({
+            "n": st.integers(1, 80),
+            "d": st.sampled_from((8, 128, 130, 200)),
+            "m": st.integers(1, 70),
+            "chunk": st.sampled_from((1, 4, 8, 64)),
+            "rif": _rifs(),
+            "dtype": float_dtypes(),
+        })
+
+    def merge_cases():
+        """(n, m, tile, rif, dtype) for merge_sorted."""
+        return st.fixed_dictionaries({
+            "n": st.integers(0, 200),
+            "m": st.integers(1, 200),
+            "tile": st.sampled_from((16, 64, 256)),
+            "rif": _rifs(),
+            "dtype": st.sampled_from(("float32", "int32")),
+        })
+
+    def spmv_cases():
+        """(nrows, ncols, nnz, rif) for csr_to_bsr + dae_spmv."""
+        return st.fixed_dictionaries({
+            "nrows": st.integers(1, 40),
+            "ncols": st.sampled_from((16, 100, 256)),
+            "nnz": st.integers(0, 150),
+            "rif": _rifs(),
+        })
+
+    def decode_cases():
+        """(b, kvh, g, s, d, bk, rif) for flash_decode [+ paged]."""
+        return st.fixed_dictionaries({
+            "b": st.integers(1, 3),
+            "kvh": st.sampled_from((1, 2)),
+            "g": st.sampled_from((1, 4)),
+            "nblk": st.integers(1, 4),      # cache length = nblk * bk
+            "bk": st.sampled_from((16, 64)),
+            "rif": _rifs(),
+        })
+
+    def searchsorted_cases():
+        """(n, m, block, chunk, rif) for batched_searchsorted."""
+        return st.fixed_dictionaries({
+            "n": st.integers(1, 600),
+            "m": st.integers(1, 100),
+            "block": st.sampled_from((64, 128)),
+            "chunk": st.sampled_from((1, 8, 64)),
+            "rif": _rifs(),
+            "dtype": st.sampled_from(("float32", "int32")),
+        })
+
+    def hash_cases():
+        """(chains, chain_len, m, chunk, rif, max_steps) for hash_lookup."""
+        return st.fixed_dictionaries({
+            "chains": st.integers(1, 24),
+            "chain_len": st.integers(1, 6),
+            "m": st.integers(1, 50),
+            "chunk": st.sampled_from((1, 8, 64)),
+            "rif": _rifs(),
+            "extra_steps": st.integers(-2, 2),  # walk short or long
+            "miss_rate": st.sampled_from((0.0, 0.3, 1.0)),
+        })

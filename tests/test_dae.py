@@ -121,3 +121,64 @@ def test_validate_real_workload_program():
     seen = progs[0].validate_channels({p: m.data for p, m in mems.items()})
     assert set(seen) == {"ht_load", "ht_state"}
     assert seen["ht_load"].capacity == 9  # rif + 1
+
+
+def test_factory_process_validate_then_simulate_no_rebuild():
+    """Factory-built programs survive validation: the dry run pumps
+    fresh generator instances, so the same object simulates correctly
+    afterwards — no manual rebuild."""
+    from repro.core.simulator import FixedLatencyMemory, simulate
+
+    load = LoadChannel("ld", capacity=4, port="mem")
+    stream = StreamChannel("st", capacity=2)
+    n = 3
+
+    def producer():
+        for i in range(n):
+            yield Req(load, i)
+            v = yield Resp(load)
+            yield Enq(stream, v)
+
+    def consumer():
+        for i in range(n):
+            v = yield Deq(stream)
+            yield Store("out", i, v)
+
+    prog = DaeProgram("ok", [Process("prod", producer),
+                             Process("cons", consumer)])
+    assert prog.rebuildable
+    # validate twice: factories make the dry run repeatable
+    prog.validate_channels({"mem": [10, 20, 30]})
+    prog.validate_channels({"mem": [10, 20, 30]})
+    mems = {"mem": FixedLatencyMemory([10, 20, 30], latency=3),
+            "out": FixedLatencyMemory([None] * n, latency=3)}
+    res = simulate(prog, mems)
+    assert res.stored_array("out", n) == [10, 20, 30]
+
+
+def test_live_generator_process_not_rebuildable():
+    def gen():
+        yield Enq(StreamChannel("s", capacity=1), 1)
+        yield Deq(StreamChannel("s", capacity=1))
+
+    p = Process("p", gen())  # legacy: pass a live generator
+    assert not p.rebuildable
+    with pytest.raises(ValueError, match="live generator"):
+        p.fresh()
+    assert not DaeProgram("legacy", [p]).rebuildable
+
+
+def test_workload_programs_are_rebuildable():
+    """Every migrated workloads.py builder hands Process a factory, so
+    validate-then-simulate works on the paper benchmarks directly."""
+    from repro.core.simulator import simulate
+    from repro.core.workloads import (_binsearch_phases, _mem_factory_for,
+                                      make_binsearch_data)
+    data = make_binsearch_data("small")
+    mf = _mem_factory_for("fixed", 1, None, ())
+    progs, mems, _, check = _binsearch_phases(data, "rhls_dec", True, 1, 8,
+                                              mf)
+    assert all(p.rebuildable for p in progs)
+    progs[0].validate_channels({p: m.data for p, m in mems.items()})
+    result = simulate(progs[0], mems)
+    assert check(result)
