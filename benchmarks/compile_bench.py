@@ -1,0 +1,68 @@
+"""Compiled-workload grid: every `repro.compile` target end-to-end.
+
+For each registered compile target the bench (1) runs the staged pass
+pipeline and reports its wall time, (2) runs the compiled Pallas kernel
+and *asserts* bit-identity against the event-driven simulator oracle —
+parity is gated, not just reported — and (3) records the inferred
+per-channel chunk/RIF plans, so a tune-cache or planner regression
+shows up in the artifact diff.
+
+Emits ``BENCH_compile.json`` at the repo root (uploaded as a CI
+artifact next to ``BENCH_kernels.json``).  ``--smoke`` keeps the small
+problem scale and is what CI runs; the full mode uses the paper-scale
+inputs.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_compile.json"
+
+
+def run(csv_print, smoke: bool = False) -> None:
+    from repro.compile.targets import (COMPILE_TARGETS, assert_parity,
+                                       compile_target)
+
+    scale = "small" if smoke else "paper"
+    rows = []
+
+    def emit(name: str, us: float, derived: str) -> None:
+        csv_print(f"{name},{us:.0f},{derived}")
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
+
+    report = {"schema": 1, "smoke": smoke, "scale": scale, "rows": rows,
+              "targets": {}}
+
+    for name in sorted(COMPILE_TARGETS):
+        t0 = time.perf_counter()
+        ck, t = compile_target(name, scale)
+        compile_ms = (time.perf_counter() - t0) * 1e3
+
+        t0 = time.perf_counter()
+        outs = ck()
+        call_us = (time.perf_counter() - t0) * 1e6
+        assert_parity(outs, t.simulate_oracle())   # gated, not reported
+
+        plans = {c: {"chunk": p.chunk, "rif": p.rif, "source": p.source}
+                 for c, p in ck.plans.items()}
+        plan_s = ";".join(f"{c}:chunk={p['chunk']},rif={p['rif']}"
+                          for c, p in sorted(plans.items()))
+        emit(f"compile/{name}/pipeline", compile_ms * 1e3,
+             f"shape={ck.shape};parity=ok")
+        emit(f"compile/{name}/kernel", call_us, plan_s or "no-channels")
+        report["targets"][name] = {
+            "shape": ck.shape, "compile_ms": round(compile_ms, 1),
+            "call_us": round(call_us, 1), "parity": "ok", "plans": plans,
+            "outputs": {p: list(np.asarray(a).shape)
+                        for p, a in outs.items()},
+        }
+
+    BENCH_JSON.write_text(json.dumps(report, indent=1, sort_keys=True)
+                          + "\n")
+    csv_print(f"compile/bench_json,0,path={BENCH_JSON.name}")

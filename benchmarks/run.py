@@ -9,6 +9,9 @@
                       per-op tuned-vs-default and chase decoupled-vs-XLA
                       cells; writes BENCH_kernels.json at the repo root
                       (--smoke for the CI-sized subset)
+    compile           repro.compile target grid: staged pipeline + compiled
+                      kernel vs the simulator oracle (parity gated); writes
+                      BENCH_compile.json (--smoke for the CI-sized subset)
     tune              autotune decoupling params, persist the config cache
     scale             N=1..64 tenants on one shared memory system
                       (throughput degradation + channel-occupancy traces;
@@ -64,6 +67,9 @@ def main() -> None:
     if on("kernel-bench"):
         from benchmarks import kernel_bench
         kernel_bench.run(_csv, smoke="--smoke" in flags)
+    if on("compile"):
+        from benchmarks import compile_bench
+        compile_bench.run(_csv, smoke="--smoke" in flags)
     if on("tune"):
         from benchmarks import tune
         tune.run(_csv)

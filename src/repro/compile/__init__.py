@@ -1,0 +1,77 @@
+"""repro.compile — a staged DAE → Pallas compiler.
+
+The paper's dynamic-HLS arm *compiles* explicitly-decoupled programs
+into hardware; this package closes the same loop for the repo: any
+rebuildable :class:`~repro.core.dae.DaeProgram` lowers onto the ring
+emitter (:mod:`repro.kernels.ring`) through a staged pass group, with
+the event-driven simulator as the differential oracle.
+
+Pass group (the pymtl3 ``PassGroup`` shape — each pass a pure function
+from the previous pass's artifact):
+
+  ``elaborate``  DaeProgram + memories  ->  :class:`DaeIR`
+  ``infer``      DaeIR  ->  per-channel :class:`ChannelPlan` (chunk/RIF)
+  ``check``      DaeIR  ->  :class:`CheckResult` or :class:`CompileError`
+  ``codegen``    DaeIR + plans  ->  :class:`CompiledKernel`
+
+See ``docs/compiler.md`` for the pipeline diagram, the staging
+semantics (what honestly compiles vs. what needs a
+:class:`ChaseSpec`), and the add-a-workload-without-a-kernel
+walkthrough.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.compile.check import CheckResult, CompileError, check
+from repro.compile.codegen import CompiledKernel, codegen
+from repro.compile.elaborate import ElaborationError, elaborate
+from repro.compile.infer import (ChannelPlan, infer_plans,
+                                 program_key_parts)
+from repro.compile.ir import (ChannelIR, ChaseSpec, DaeIR, PortArray,
+                              StoreIR, StreamKind)
+
+__all__ = [
+    "compile_program", "PASSES",
+    "CompiledKernel", "CompileError", "ElaborationError",
+    "ChaseSpec", "DaeIR", "ChannelIR", "StoreIR", "PortArray",
+    "StreamKind", "ChannelPlan", "CheckResult",
+    "elaborate", "infer_plans", "check", "codegen",
+    "program_key_parts",
+]
+
+#: The staged pass group, in execution order.
+PASSES = ("elaborate", "infer", "check", "codegen")
+
+
+def compile_program(prog, memories: Optional[Dict[str, Any]] = None, *,
+                    chase: Optional[ChaseSpec] = None,
+                    rif: Optional[int] = None,
+                    chunk: Optional[int] = None,
+                    interpret: Optional[bool] = None,
+                    max_steps: int = 1_000_000) -> CompiledKernel:
+    """Compile ``prog`` into a runnable Pallas kernel.
+
+    ``memories`` maps port name -> indexable data (plain lists/arrays,
+    or simulator ``MemoryModel`` objects — their ``.data`` is used).
+    ``chase`` supplies the loop semantics for DEPENDENT access streams
+    (see :class:`ChaseSpec`); ``rif``/``chunk`` override the inference
+    pass (else: tune cache under the ``compiled:<name>`` key, else
+    ``plan_rif``).  Raises :class:`CompileError` with per-finding
+    diagnostics for programs the ring scaffolds cannot express.
+    """
+    from repro.kernels.common import resolve_interpret
+
+    interp = resolve_interpret(interpret)
+    mems = {port: getattr(data, "data", data)
+            for port, data in (memories or {}).items()}
+
+    try:
+        ir = elaborate(prog, mems, max_steps=max_steps)
+    except ElaborationError as e:
+        raise CompileError("elaborate", [str(e)]) from e
+
+    plans = infer_plans(ir, rif=rif, chunk=chunk, interpret=interp)
+    chk = check(prog, ir, chase=chase)
+    return codegen(ir, chk, plans, chase=chase, interpret=interp)

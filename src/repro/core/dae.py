@@ -267,8 +267,11 @@ class DaeProgram:
         the dry run pumps fresh instances and leaves the program's own
         generators untouched — validate-then-simulate needs no rebuild.
         Legacy programs built from live generators are still accepted,
-        but the dry run consumes them: validate a freshly built program,
-        then rebuild it before simulating.
+        but for them (and only them) the dry run consumes the
+        generators: validate a freshly built program, then rebuild it
+        before simulating.  The staged compiler in :mod:`repro.compile`
+        requires the factory form outright — its elaborate pass pumps
+        this same loop twice and hands the untouched program back.
         """
         from repro.core.simulator import Fused, Par  # deferred: no cycle
 

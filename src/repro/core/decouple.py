@@ -22,6 +22,13 @@ The kernels themselves share one emission layer,
 ``.response`` are the TPU forms of ``decouple_request`` /
 ``decouple_response`` from :mod:`repro.core.dae`, so the simulator IR
 and the TPU emitter speak the same §3 vocabulary.
+
+Workloads with no hand-written kernel at all reach the same emitter
+through :mod:`repro.compile`: a rebuildable :class:`DaeProgram`
+(generator factories — ``validate_channels`` and the compiler's
+elaborate pass pump *fresh* instances, so neither consumes the
+program) lowers onto the ring scaffolds directly.  See
+``docs/compiler.md``.
 """
 
 from __future__ import annotations

@@ -70,7 +70,9 @@ from repro.core.simulator import (
 from repro.core.trace import Tracer, TraceSummary
 
 __all__ = ["BENCHMARKS", "CONFIGS", "MULTI_BENCHMARKS", "run_workload",
-           "run_workload_multi", "WorkloadReport", "MultiWorkloadReport"]
+           "run_workload_multi", "WorkloadReport", "MultiWorkloadReport",
+           "make_gather_data", "gather_ref", "gather_phases",
+           "make_frontier_data", "frontier_ref", "frontier_phases"]
 
 CONFIGS = ("vitis", "vitis_dec", "rhls", "rhls_stream", "rhls_dec")
 BENCHMARKS = (
@@ -513,6 +515,141 @@ def _binsearch_phases(data, config, early, latency, rif, mem_factory,
         return all(g == e for g, e in zip(got, expected))
 
     return [DaeProgram(f"binsearch[{config}]", procs)], mems, golden_loads, check
+
+
+# ---------------------------------------------------------------------------
+# Compile-target workloads: gather / frontier_gather
+#
+# These are not Fig. 4 benchmarks; they exist as inputs to the
+# repro.compile pipeline (see repro/compile/targets.py).  gather mirrors
+# the hand-written dae_gather kernel family so compiled-vs-handwritten
+# cells are comparable; frontier_gather — one BFS frontier expansion
+# step, out[k] = dist[adj[u_k, j]] — has NO hand-written kernel and
+# lands end-to-end through the compiler alone.
+# ---------------------------------------------------------------------------
+
+
+def make_gather_data(scale: str, seed: int = 5) -> Dict[str, Any]:
+    n, d, lookups = {
+        "paper": (4_096, 128, 2_048),
+        "small": (128, 8, 33),
+    }[scale]
+    r = _rng(seed)
+    table = r.standard_normal((n, d)).astype(np.float32)
+    idx = r.integers(0, n, size=lookups).astype(np.int64)
+    return {"table": table, "idx": idx, "n": n, "d": d}
+
+
+def gather_ref(table: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    return table[idx]
+
+
+def gather_phases(data, latency, rif, mem_factory, cap=None):
+    """Decoupled row gather: a static Access stream + a copy Execute.
+
+    Same ([programs], mems, golden_loads, check) shape as the
+    benchmark ``_phases`` builders, so the simulator drives it
+    unchanged; `repro.compile` stages the identical program.
+    """
+    table, idx = data["table"], data["idx"]
+    m = len(idx)
+    mems = {
+        "table": mem_factory("table", [row for row in table]),
+        "out": FixedLatencyMemory([None] * m, latency),
+    }
+    ch = LoadChannel("ga_load", capacity=_chan_cap(rif, cap), port="table")
+
+    def access():
+        for a in idx:
+            yield Req(ch, int(a))
+
+    def execute():
+        for j in range(m):
+            yield Fused(Resp(ch), lambda v, j=j: Store("out", j, v))
+
+    progs = [DaeProgram("gather[rhls_dec]",
+                        [Process("access", access),
+                         Process("execute", execute)])]
+    expected = gather_ref(table, idx)
+
+    def check(result: SimResult) -> bool:
+        got = result.stored_array("out", m)
+        return all(np.array_equal(g, e) for g, e in zip(got, expected))
+
+    return progs, mems, m, check
+
+
+def make_frontier_data(scale: str, seed: int = 6) -> Dict[str, Any]:
+    n, deg, frontier_n = {
+        "paper": (4_096, 16, 512),
+        "small": (96, 4, 17),
+    }[scale]
+    r = _rng(seed)
+    # Padded degree-`deg` adjacency; missing edges point at the sentinel
+    # node n, whose dist entry is -1 (so the compiled kernel never needs
+    # a divergent "skip this lane" branch — the paper's fixed-length
+    # redundant-work trick applied to graph irregularity).
+    adj = r.integers(0, n, size=(n, deg)).astype(np.int64)
+    adj[r.random((n, deg)) < 0.25] = n
+    dist = np.concatenate([r.integers(0, 64, size=n), [-1]]).astype(np.int64)
+    frontier = r.choice(n, size=frontier_n, replace=False).astype(np.int64)
+    return {"adj": adj, "dist": dist, "frontier": frontier, "n": n,
+            "deg": deg}
+
+
+def frontier_ref(adj: np.ndarray, dist: np.ndarray,
+                 frontier: np.ndarray) -> np.ndarray:
+    """One frontier-expansion step: the neighbour distances of every
+    frontier node, in (node, edge-slot) order."""
+    return dist[adj[frontier].ravel()]
+
+
+def frontier_phases(data, latency, rif, mem_factory, cap=None):
+    """BFS frontier expansion as a two-channel DAE program.
+
+    Access issues the (static) flattened adjacency addresses of the
+    frontier; a deref stage turns each landed neighbour id into a
+    ``dist`` request (the one-hop indirect load, ``dist[adj[...]]``);
+    Execute stores the landed distances.
+    """
+    adj, dist, frontier = data["adj"], data["dist"], data["frontier"]
+    deg = data["deg"]
+    m = len(frontier) * deg
+    mems = {
+        "adj": mem_factory("adj", [int(v) for v in adj.ravel()]),
+        "dist": mem_factory("dist", [int(v) for v in dist]),
+        "out": FixedLatencyMemory([None] * m, latency),
+    }
+    adj_ch = LoadChannel("fg_adj", capacity=_chan_cap(rif, cap),
+                         port="adj")
+    dist_ch = LoadChannel("fg_dist", capacity=_chan_cap(rif, cap),
+                          port="dist")
+
+    def access():
+        for u in frontier:
+            for j in range(deg):
+                yield Req(adj_ch, int(u) * deg + j)
+
+    def deref():
+        for _ in range(m):
+            v = yield Resp(adj_ch)
+            yield Req(dist_ch, int(v))
+
+    def execute():
+        for k in range(m):
+            yield Fused(Resp(dist_ch), lambda v, k=k: Store("out", k, v))
+
+    progs = [DaeProgram("frontier_gather[rhls_dec]",
+                        [Process("access", access),
+                         Process("deref", deref),
+                         Process("execute", execute)])]
+    expected = frontier_ref(adj, dist, frontier)
+
+    def check(result: SimResult) -> bool:
+        got = result.stored_array("out", m)
+        return all(int(g) == int(e) for g, e in zip(got, expected))
+
+    return progs, mems, 2 * m, check
 
 
 # ---------------------------------------------------------------------------

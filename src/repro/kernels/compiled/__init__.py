@@ -1,0 +1,12 @@
+"""Generic ring kernels that `repro.compile` lowers programs onto.
+
+These sit beside the hand-written families (``dae_gather``,
+``dae_chase``, ...) but are *shape-generic*: the compiler instantiates
+them from an elaborated :class:`~repro.compile.ir.DaeIR` instead of a
+human writing a kernel per workload.
+"""
+
+from repro.kernels.compiled.kernel import ring_chase, ring_deref, \
+    ring_gather
+
+__all__ = ["ring_gather", "ring_deref", "ring_chase"]

@@ -107,18 +107,22 @@ def searchsorted_blocks(tiles: jax.Array, blk: jax.Array, keys: jax.Array,
 
 
 def _hash_probe_kernel(heads_ref, keys_ref, packed_hbm, out_ref, idx_s,
-                       found_s, val_s, scratch, sems, *, chunk: int,
+                       found_v, val_v, scratch, sems, *, chunk: int,
                        rif: int, max_steps: int, n: int):
     c = pl.program_id(0)
     base = c * chunk
 
+    # Only the chain cursor needs per-scalar SMEM (the ring's src reads
+    # it back one scalar at a time); found/val state lives as VMEM
+    # vectors so init and emit are single vector ops, not chunk-long
+    # scalar loops.
     def init(k, _):
         idx_s[k] = heads_ref[base + k]
-        found_s[k] = 0
-        val_s[k] = -1
         return 0
 
     jax.lax.fori_loop(0, chunk, init, 0)
+    found_v[...] = jnp.zeros((1, chunk), jnp.int32)
+    val_v[...] = jnp.full((1, chunk), -1, jnp.int32)
 
     # the Access stream reads the per-chain cursor back out of SMEM: a
     # resolved or dead chain keeps re-requesting a clipped address
@@ -132,10 +136,14 @@ def _hash_probe_kernel(heads_ref, keys_ref, packed_hbm, out_ref, idx_s,
     def execute(k, ent):
         ek, ev, nxt = ent[0, 0], ent[0, 1], ent[0, 2]
         cur = idx_s[k]
-        alive = (cur >= 0) & (found_s[k] == 0)
+        found_k = pl.load(found_v, (pl.ds(0, 1), pl.ds(k, 1)))[0, 0]
+        alive = (cur >= 0) & (found_k == 0)
         hit = alive & (ek == keys_ref[base + k])
-        val_s[k] = jnp.where(hit, ev, val_s[k])
-        found_s[k] = jnp.where(hit, 1, found_s[k])
+        val_k = pl.load(val_v, (pl.ds(0, 1), pl.ds(k, 1)))[0, 0]
+        pl.store(val_v, (pl.ds(0, 1), pl.ds(k, 1)),
+                 jnp.where(hit, ev, val_k)[None, None])
+        pl.store(found_v, (pl.ds(0, 1), pl.ds(k, 1)),
+                 jnp.where(hit, 1, found_k)[None, None])
         idx_s[k] = jnp.where(alive & ~hit, nxt, cur)
 
     def level(_, carry):
@@ -146,12 +154,7 @@ def _hash_probe_kernel(heads_ref, keys_ref, packed_hbm, out_ref, idx_s,
 
     jax.lax.fori_loop(0, max_steps, level, 0)
 
-    def emit(k, _):
-        pl.store(out_ref, (pl.ds(k, 1),),
-                 jnp.where(found_s[k] == 1, val_s[k], -1)[None])
-        return 0
-
-    jax.lax.fori_loop(0, chunk, emit, 0)
+    out_ref[...] = jnp.where(found_v[0, :] == 1, val_v[0, :], -1)
 
 
 def hash_probe(packed: jax.Array, heads: jax.Array, keys: jax.Array, *,
@@ -177,8 +180,8 @@ def hash_probe(packed: jax.Array, heads: jax.Array, keys: jax.Array, *,
             out_specs=pl.BlockSpec((chunk,), lambda c, h_, k_: (c,)),
             scratch_shapes=[
                 pltpu.SMEM((chunk,), jnp.int32),
-                pltpu.SMEM((chunk,), jnp.int32),
-                pltpu.SMEM((chunk,), jnp.int32),
+                pltpu.VMEM((1, chunk), jnp.int32),
+                pltpu.VMEM((1, chunk), jnp.int32),
                 *ring_scratch_shapes(rif, (1, packed.shape[1]),
                                      packed.dtype),
             ],

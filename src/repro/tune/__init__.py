@@ -27,17 +27,19 @@ from typing import Optional, Tuple
 
 from repro.tune.cache import (CacheEntry, TuneCache, cache_path,
                               default_cache, make_key, reset_default_cache)
-from repro.tune.runners import (KERNEL_DIMS, backend_tag, kernel_runner,
-                                multi_workload_runner, workload_runner)
+from repro.tune.runners import (KERNEL_DIMS, backend_tag, compiled_runner,
+                                kernel_runner, multi_workload_runner,
+                                workload_runner)
 from repro.tune.search import TuneResult, search
-from repro.tune.space import (Config, SearchSpace, kernel_space,
-                              workload_space)
+from repro.tune.space import (Config, SearchSpace, compiled_space,
+                              kernel_space, workload_space)
 
 __all__ = [
     "CacheEntry", "TuneCache", "TuneResult", "SearchSpace", "Config",
     "cache_path", "default_cache", "reset_default_cache", "make_key",
-    "kernel_space", "workload_space", "kernel_runner", "workload_runner",
-    "multi_workload_runner", "KERNEL_DIMS", "tune_kernel", "tune_workload",
+    "kernel_space", "workload_space", "compiled_space", "kernel_runner",
+    "compiled_runner", "workload_runner", "multi_workload_runner",
+    "KERNEL_DIMS", "tune_kernel", "tune_workload", "tune_compiled",
     "dispatch_config",
 ]
 
@@ -62,6 +64,48 @@ def tune_kernel(op: str, dims: Optional[Tuple[int, ...]] = None, *,
                               dict(hit.config), hit.baseline_score
                               or hit.score, 0, [])
     space = kernel_space(op, *dims)
+    res = search(space, measure, max_evals=max_evals, strategy=strategy)
+    entry = CacheEntry(config=res.best, score=res.best_score,
+                       baseline_score=res.seed_score,
+                       evals=res.evals, note="wallclock")
+    cache.put(key, entry)
+    # some ops dispatch under transformed dims (e.g. dae_spmv's rif
+    # lookup sees BSR operands while the winner is stored at CSR dims);
+    # the runner declares those alias keys so the winner is visible at
+    # every dispatch site
+    alias = getattr(measure, "alias_keys", None)
+    if alias is not None:
+        for akey in alias(res.best):
+            cache.put(akey, CacheEntry(config=res.best,
+                                       score=res.best_score,
+                                       baseline_score=res.seed_score,
+                                       evals=res.evals,
+                                       note="wallclock-alias"))
+    return res
+
+
+def tune_compiled(target: str, *, scale: str = "small",
+                  interpret: Optional[bool] = None, reps: int = 2,
+                  max_evals: int = 16, strategy: str = "auto",
+                  cache: Optional[TuneCache] = None,
+                  force: bool = False) -> TuneResult:
+    """Tune chunk/RIF for a `repro.compile` target by wall-clock.
+
+    The winner persists under the per-program ``compiled:<name>`` key,
+    which is exactly what the compiler's infer pass consults — after
+    this runs, a plain ``compile_program`` on the same program picks the
+    tuned ring sizing from the cache with no caller involvement.
+    """
+    cache = cache or default_cache()
+    measure, key, dims = compiled_runner(target, scale=scale,
+                                         interpret=interpret, reps=reps)
+    if not force:
+        hit = cache.get(key)
+        if hit is not None:
+            return TuneResult(f"compiled:{target}", dict(hit.config),
+                              hit.score, dict(hit.config),
+                              hit.baseline_score or hit.score, 0, [])
+    space = compiled_space(dims[0], dims[1], name=f"compiled:{target}")
     res = search(space, measure, max_evals=max_evals, strategy=strategy)
     cache.put(key, CacheEntry(config=res.best, score=res.best_score,
                               baseline_score=res.seed_score,

@@ -28,8 +28,9 @@ import numpy as np
 from repro.tune.cache import make_key
 from repro.tune.space import Config
 
-__all__ = ["kernel_runner", "workload_runner", "multi_workload_runner",
-           "KERNEL_DIMS", "backend_tag", "time_callable"]
+__all__ = ["kernel_runner", "compiled_runner", "workload_runner",
+           "multi_workload_runner", "KERNEL_DIMS", "backend_tag",
+           "time_callable"]
 
 # default problem dimensions per op: modest sizes so a CPU interpret-mode
 # tuning sweep finishes in seconds, big enough that block shape matters
@@ -249,6 +250,18 @@ def _spmv_measure(dims, interpret, reps):
                              rif=cfg.get("rif", 2), interpret=interpret),
             reps)
 
+    def alias_keys(best: Config):
+        # csr_to_bsr dispatches its block shape under the CSR dims this
+        # runner stores the winner at, but dae_spmv's rif lookup only
+        # sees the *converted* operands — mirror the winner under the
+        # BSR-dims key so the tuned rif actually dispatches.
+        vb, _ri, _ci, _pad, nrb = csr_to_bsr(rows, cols, val, ncols,
+                                             bm=best["bm"], bk=best["bk"])
+        bsr_dims = (nrb * best["bm"], ncols, len(vb))
+        return [make_key("dae_spmv", bsr_dims, "float32",
+                         backend_tag(interpret), "wallclock")]
+
+    measure.alias_keys = alias_keys
     return measure, (nrows, ncols, nnz), "float32"
 
 
@@ -279,6 +292,37 @@ def kernel_runner(op: str, dims: Optional[Tuple[int, ...]] = None, *,
     interp = resolve_interpret(interpret)
     measure, shape, dtype = _KERNEL_MEASURES[op](dims, interp, reps)
     key = make_key(op, shape, dtype, backend_tag(interp), "wallclock")
+    return measure, key, dims
+
+
+def compiled_runner(target: str, *, scale: str = "small",
+                    interpret: Optional[bool] = None, reps: int = 2):
+    """Wall-clock measurement for a `repro.compile` target program.
+
+    The cache key is the *per-program* key from ``program_key_parts``
+    (``compiled:<program name>`` + total requests × max port width), the
+    same key ``infer_plans`` consults — so a winner persisted here
+    dispatches automatically on the next plain ``compile_program`` call.
+    """
+    from repro.compile import compile_program, elaborate, \
+        program_key_parts
+    from repro.compile.targets import build_target
+    from repro.kernels.common import resolve_interpret
+
+    interp = resolve_interpret(interpret)
+    t = build_target(target, scale)
+    ir = elaborate(t.prog, t.memories)
+    op, dims, dtype = program_key_parts(ir)
+    key = make_key(op, dims, dtype, backend_tag(interp), "wallclock")
+
+    def measure(cfg: Config) -> float:
+        # chunk/rif explicit: recompile per point, never consult the
+        # cache mid-search (same hygiene as the kernel measures)
+        ck = compile_program(t.prog, t.memories, chase=t.chase,
+                             chunk=cfg.get("chunk", 64),
+                             rif=cfg.get("rif", 8), interpret=interp)
+        return time_callable(lambda: ck(), reps)
+
     return measure, key, dims
 
 

@@ -23,7 +23,7 @@ from repro.core.pipeline import plan_rif
 Config = Dict[str, Any]
 
 __all__ = ["SearchSpace", "Config", "kernel_space", "workload_space",
-           "KERNEL_SPACES"]
+           "compiled_space", "KERNEL_SPACES"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,6 +198,23 @@ def _spmv_space(nrows: int, ncols: int, nnz: int) -> SearchSpace:
         "bk": (128, 256),
         "rif": _pow2_range(1, 16),
     }, {"bm": 8, "bk": 128, "rif": 2}))
+
+
+def compiled_space(total_requests: int, width: int, itemsize: int = 4,
+                   name: str = "compiled") -> SearchSpace:
+    """Chunk × ring-depth space for a `repro.compile` program.
+
+    One space per *program* (not per channel): the compiler applies the
+    winning chunk/rif to every ring it emits, matching the one-key-per-
+    program cache contract of ``program_key_parts``.
+    """
+    chunks = tuple(c for c in _pow2_range(8, 256)
+                   if c <= max(8, total_requests))
+    plan = plan_rif(max(width, 1) * itemsize)
+    return _snapped(SearchSpace(name, {
+        "chunk": chunks,
+        "rif": _pow2_range(1, 64),
+    }, {"chunk": 64, "rif": plan.rif}))
 
 
 KERNEL_SPACES = {
