@@ -1,0 +1,154 @@
+"""Regression gate: diff fresh ``BENCH_*.json`` against the baseline.
+
+Usage (CI runs exactly this after ``python -m benchmarks.run matrix
+--smoke``)::
+
+    python -m benchmarks.diff [axes...] [--baseline-dir benchmarks/baseline]
+        [--fresh-dir .] [--wall-pct N] [--allowlist benchmarks/diff_allowlist.txt]
+        [--vcd-dir vcd_failures] [--update-baseline]
+
+Behavior:
+
+  * cycle counts, ``status`` and integer ``derived`` values diff
+    **exactly** (the simulator is deterministic across machines);
+  * warm wall-clock diffs within ``--wall-pct`` percent (CI passes a
+    deliberately lenient band — wall time on shared runners is noise;
+    the cycle gate is the tight one);
+  * cells *removed* from the fresh run fail (coverage must not shrink
+    silently); new cells are notes until the baseline is refreshed;
+  * intentional changes go in the allowlist (fnmatch patterns against
+    ``axis/cell-name``, one per line) or through ``--update-baseline``,
+    which validates the fresh reports and copies them over the
+    committed baseline;
+  * a failing simulator cell that recorded ``replay`` info is re-run
+    under :class:`repro.core.waveform.WaveformTracer` and its VCD
+    waveform written to ``--vcd-dir`` (uploaded as a CI artifact), so a
+    cycle regression arrives as a viewable waveform, not just a number.
+
+Exit status: 0 clean (or baseline updated), 1 regressions, 2 usage or
+missing/invalid report files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.bench import (Finding, bench_path, diff_reports, load_report,
+                         parse_allowlist, regressions)
+from repro.bench.schema import SchemaError
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_AXES = ("sim", "kernels", "compile")
+DEFAULT_BASELINE = REPO_ROOT / "benchmarks" / "baseline"
+DEFAULT_ALLOWLIST = REPO_ROOT / "benchmarks" / "diff_allowlist.txt"
+
+
+def _load(path: Path, role: str):
+    if not path.exists():
+        print(f"error: {role} report {path} does not exist", file=sys.stderr)
+        raise SystemExit(2)
+    try:
+        return load_report(path)
+    except (SchemaError, ValueError) as e:
+        print(f"error: {role} report {path} is invalid:\n{e}",
+              file=sys.stderr)
+        raise SystemExit(2)
+
+
+def _dump_vcd(report: dict, finding: Finding, vcd_dir: Path) -> Path | None:
+    """Re-run a failing simulator cell under a WaveformTracer."""
+    cell = next((c for c in report["cells"] if c["name"] == finding.cell),
+                None)
+    if not cell or not cell.get("replay"):
+        return None
+    replay = cell["replay"]
+    try:
+        from repro.core.waveform import WaveformTracer
+        from repro.core.workloads import run_workload
+        from repro.core.simulator import DeadlockError
+        tracer = WaveformTracer()
+        try:
+            run_workload(replay["benchmark"], replay["config"],
+                         tracer=tracer, **replay.get("kwargs", {}))
+        except DeadlockError:
+            pass  # the partial waveform up to the deadlock is the point
+        vcd_dir.mkdir(parents=True, exist_ok=True)
+        out = vcd_dir / (finding.cell.replace("/", "_") + ".vcd")
+        tracer.write_vcd(out, comment=f"{finding.axis}/{finding.cell}: "
+                                      f"{finding.detail}")
+        return out
+    except Exception as e:  # a broken replay must not mask the diff result
+        print(f"  (vcd replay of {finding.cell} failed: {e})",
+              file=sys.stderr)
+        return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.diff",
+        description="diff fresh BENCH_*.json against the committed baseline")
+    ap.add_argument("axes", nargs="*", default=None,
+                    help=f"axes to diff (default: {' '.join(DEFAULT_AXES)})")
+    ap.add_argument("--baseline-dir", type=Path, default=DEFAULT_BASELINE)
+    ap.add_argument("--fresh-dir", type=Path, default=REPO_ROOT,
+                    help="where the fresh run wrote its BENCH files")
+    ap.add_argument("--wall-pct", type=float, default=25.0,
+                    help="warm wall-clock regression gate, percent")
+    ap.add_argument("--allowlist", type=Path, default=DEFAULT_ALLOWLIST)
+    ap.add_argument("--vcd-dir", type=Path,
+                    default=REPO_ROOT / "vcd_failures",
+                    help="where failing sim cells dump VCD waveforms")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="validate fresh reports and copy them over the "
+                         "baseline instead of diffing")
+    args = ap.parse_args(argv)
+    axes = tuple(args.axes) or DEFAULT_AXES
+
+    if args.update_baseline:
+        args.baseline_dir.mkdir(parents=True, exist_ok=True)
+        for axis in axes:
+            fresh_path = bench_path(axis, args.fresh_dir)
+            _load(fresh_path, "fresh")  # schema-validate before promoting
+            dst = bench_path(axis, args.baseline_dir)
+            shutil.copyfile(fresh_path, dst)
+            print(f"baseline updated: {dst.relative_to(REPO_ROOT)}")
+        return 0
+
+    allow = ()
+    if args.allowlist.exists():
+        allow = parse_allowlist(args.allowlist.read_text())
+
+    any_regression = False
+    for axis in axes:
+        baseline = _load(bench_path(axis, args.baseline_dir), "baseline")
+        fresh = _load(bench_path(axis, args.fresh_dir), "fresh")
+        findings = diff_reports(baseline, fresh, wall_pct=args.wall_pct,
+                                allowlist=allow)
+        regs = regressions(findings)
+        status = f"{len(regs)} regression(s)" if regs else "clean"
+        print(f"== axis {axis}: {len(fresh['cells'])} cells, {status}")
+        for f in findings:
+            print("  " + f.render())
+        for f in regs:
+            if f.kind in ("cycles", "status"):
+                out = _dump_vcd(fresh, f, args.vcd_dir)
+                if out:
+                    print(f"  waveform: {out.relative_to(REPO_ROOT)}")
+        any_regression |= bool(regs)
+
+    if any_regression:
+        print("\nFAIL: benchmark regressions above. If intentional, refresh "
+              "with:\n  PYTHONPATH=src python -m benchmarks.diff "
+              "--update-baseline\nor add an allowlist pattern to "
+              f"{DEFAULT_ALLOWLIST.name}.", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

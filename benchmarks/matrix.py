@@ -1,0 +1,125 @@
+"""Assemble and run the full benchmark matrix.
+
+Three axes, one ``BENCH_<axis>.json`` each (written at the repo root,
+diffed against ``benchmarks/baseline/`` by ``benchmarks.diff``):
+
+  * ``sim``     — pure-simulator cells: Table 1/2/3 and Fig. 4 grids
+                  (declared by their legacy modules) plus the ``grid``
+                  group declared here: event-vs-polling scheduler
+                  parity cells and 1-vs-N tenant contention cells;
+  * ``kernels`` — decoupled-kernel microbenches, tuned-vs-default
+                  pairs, chase decoupled-vs-XLA, compiled-vs-hand;
+  * ``compile`` — every ``repro.compile`` target, pipeline + kernel
+                  with the cold/warm split.
+
+The runner executes **every** registered cell of each requested axis —
+cell selection is deliberately not a feature (see
+:mod:`repro.bench.matrix`).  ``--smoke`` switches problem scales to CI
+size; baselines are committed from smoke runs, so the CI gate compares
+like against like.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Callable, Dict, List
+
+from repro.bench import BenchContext, Cell, CellResult, coords, run_axis
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+AXES = ("sim", "kernels", "compile")
+
+# engine-parity cells: both schedulers must report the same cycles for
+# the same cell; the diff gate pins each engine's count independently,
+# and the cell itself cross-checks them (bit-exactness is an invariant,
+# not a statistic)
+_PARITY_BENCHES = ("binsearch", "hashtable")
+_ENGINES = ("event", "polling")
+
+# tenant-contention cells: N instances sharing one memory system under
+# a shared outstanding-request budget (the §5.4 regime)
+_TENANT_BENCHES = ("hashtable", "spmv")
+_TENANT_NS = (1, 4)
+
+
+def _engine_cell(bench: str, engine: str):
+    def run(ctx: BenchContext) -> CellResult:
+        from repro.core.workloads import run_workload
+        kwargs = dict(scale=ctx.sim_scale, latency=100, rif=32,
+                      engine=engine)
+        r = run_workload(bench, "rhls_dec", **kwargs)
+        other = "polling" if engine == "event" else "event"
+        r2 = run_workload(bench, "rhls_dec", scale=ctx.sim_scale,
+                          latency=100, rif=32, engine=other)
+        assert r.cycles == r2.cycles, (
+            f"engine parity broken on {bench}: {engine}={r.cycles} "
+            f"vs {other}={r2.cycles}")
+        return CellResult(cycles=int(r.cycles),
+                          derived={"golden": int(r.golden)},
+                          replay={"benchmark": bench, "config": "rhls_dec",
+                                  "kwargs": kwargs})
+    return run
+
+
+def _tenant_cell(bench: str, n: int):
+    def run(ctx: BenchContext) -> CellResult:
+        from repro.core.workloads import run_workload_multi
+        rep = run_workload_multi(bench, "rhls_dec", n, scale="small",
+                                 latency=100, rif=32, max_outstanding=64)
+        if not rep.correct:  # must fire even under python -O
+            raise AssertionError(f"grid/{bench}/n{n} incorrect")
+        return CellResult(
+            cycles=int(rep.cycles),
+            derived={"thr_per_inst":
+                     round(rep.throughput_per_instance, 5)})
+    return run
+
+
+def _grid_cells() -> List[Cell]:
+    out: List[Cell] = []
+    for bench in _PARITY_BENCHES:
+        for engine in _ENGINES:
+            out.append(Cell(
+                axis="sim", name=f"grid/{bench}/rhls_dec/engine={engine}",
+                coords=coords(bench, "sim", engine=engine),
+                run=_engine_cell(bench, engine), group="grid"))
+    for bench in _TENANT_BENCHES:
+        for n in _TENANT_NS:
+            out.append(Cell(
+                axis="sim", name=f"grid/{bench}/rhls_dec/tenants={n}",
+                coords=coords(bench, "sim", tenants=n),
+                run=_tenant_cell(bench, n), group="grid"))
+    return out
+
+
+def collect(axis: str, ctx: BenchContext) -> List[Cell]:
+    """Every registered cell of ``axis`` — the whole suite, always."""
+    if axis == "sim":
+        from benchmarks import (fig4_golden, table1_perf, table2_resources,
+                                table3_moms)
+        return (table1_perf.cells(ctx) + table2_resources.cells(ctx)
+                + table3_moms.cells(ctx) + fig4_golden.cells(ctx)
+                + _grid_cells())
+    if axis == "kernels":
+        from benchmarks import kernel_bench
+        return kernel_bench.cells(ctx)
+    if axis == "compile":
+        from benchmarks import compile_bench
+        return compile_bench.cells(ctx)
+    raise ValueError(f"unknown axis {axis!r} (have {AXES})")
+
+
+def run_matrix(csv_print: Callable[[str], None], smoke: bool = False,
+               *, out_dir: Path = REPO_ROOT,
+               axes: tuple = AXES, seed: int = 0) -> Dict[str, Dict]:
+    ctx = BenchContext(smoke=smoke, seed=seed)
+    reports: Dict[str, Dict] = {}
+    for axis in axes:
+        reports[axis] = run_axis(axis, collect(axis, ctx), ctx,
+                                 out_dir=out_dir, csv_print=csv_print)
+    return reports
+
+
+def run(csv_print, smoke: bool = False) -> None:
+    run_matrix(csv_print, smoke)

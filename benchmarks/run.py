@@ -23,6 +23,12 @@
                       coupled legacy loop: batch_slots x prompt mixes x
                       archetypes, tokens/s + TTFT + channel occupancy
                       (--smoke gates >=5x on the mixed slots=8 cell)
+    matrix            the declarative benchmark matrix (repro.bench):
+                      runs EVERY registered cell of the sim/kernels/
+                      compile axes and writes one schema-validated
+                      BENCH_<axis>.json per axis at the repo root;
+                      gate a run against the committed baseline with
+                      `python -m benchmarks.diff` (--smoke for CI scale)
 
 Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 tune scale ...]
 """
@@ -82,6 +88,11 @@ def main() -> None:
     if on("serve-bench"):
         from benchmarks import serve_bench
         serve_bench.run(_csv, smoke="--smoke" in flags)
+    if want and on("matrix"):
+        # explicit-only: the bare run-everything default already covers
+        # each table once; matrix would re-run them all a second time
+        from benchmarks import matrix
+        matrix.run(_csv, smoke="--smoke" in flags)
 
 
 if __name__ == "__main__":

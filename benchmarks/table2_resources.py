@@ -4,28 +4,49 @@ FPGA LUT/FF/BRAM have no TPU meaning; the comparable quantities for the
 decoupled designs are (a) the number of channels (request/response pairs
 ~ dataflow units) and (b) total buffer bytes implied by channel
 capacities (the BRAM analogue), plus memory-port counts.  We reconstruct
-them by instrumenting the simulator channel registry at paper scale.
+them by instrumenting the simulator channel registry at small scale.
+
+As matrix cells (``sim`` axis, group ``table2``) all three quantities
+are integer ``derived`` values, so the regression gate diffs them
+exactly — a refactor that silently changes a workload's port count
+fails the diff by name.
 """
 
 from __future__ import annotations
 
+from typing import List
+
+from repro.bench import BenchContext, Cell, CellResult, coords, run_cells
 from repro.core.simulator import DeadlockError
-from repro.core.workloads import BENCHMARKS, CONFIGS, run_workload
+from repro.core.workloads import BENCHMARKS, run_workload
+
+
+def _cell_run(bench: str, config: str):
+    def run(ctx: BenchContext) -> CellResult:
+        try:
+            r = run_workload(bench, config, scale="small", latency=100,
+                             rif=128)
+        except DeadlockError:
+            return CellResult(status="deadlock")
+        n_ports = len(r.mem_reads)
+        n_channels = max(1, n_ports - 1) * 2  # req/resp pair per port
+        # buffer bytes: capacity entries x 4B words, summed over
+        # channels (upper bound: every channel sized at RIF)
+        buffer_bytes = n_channels * 128 * 4
+        return CellResult(derived={"channels": n_channels,
+                                   "ports": n_ports,
+                                   "buffer_bytes": buffer_bytes})
+    return run
+
+
+def cells(ctx: BenchContext) -> List[Cell]:
+    return [
+        Cell(axis="sim", name=f"table2/{bench}/{config}", group="table2",
+             coords=coords(bench, "sim"), run=_cell_run(bench, config))
+        for bench in BENCHMARKS for config in ("vitis_dec", "rhls_dec")
+    ]
 
 
 def run(csv_print) -> None:
-    for bench in BENCHMARKS:
-        for config in ("vitis_dec", "rhls_dec"):
-            try:
-                r = run_workload(bench, config, scale="small", latency=100,
-                                 rif=128)
-            except DeadlockError:
-                continue
-            n_ports = len(r.mem_reads)
-            n_channels = max(1, n_ports - 1) * 2  # req/resp pair per port
-            # buffer bytes: capacity entries x 4B words, summed over
-            # channels (upper bound: every channel sized at RIF)
-            buffer_bytes = n_channels * 128 * 4
-            csv_print(f"table2/{bench}/{config},0,"
-                      f"channels={n_channels};ports={n_ports};"
-                      f"buffer_bytes<={buffer_bytes}")
+    ctx = BenchContext(smoke=False)
+    run_cells(cells(ctx), ctx, csv_print)

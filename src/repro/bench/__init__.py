@@ -1,0 +1,47 @@
+"""repro.bench — declarative benchmark matrix with a regression gate.
+
+The paper's evaluation (§6) is a grid: workloads x decoupling configs,
+kernel vs compiled lowering, one vs many tenants, tuned vs default
+knobs.  This package turns the repo's benchmark scripts into that grid
+explicitly:
+
+  * :mod:`~repro.bench.registry` — cells keyed by ``(workload, kind,
+    engine, backend, tenants, tuned)`` plus a ``run(ctx)`` closure;
+  * :mod:`~repro.bench.matrix` — runs **every** cell of an axis (no
+    cherry-picking) and writes one ``BENCH_<axis>.json``;
+  * :mod:`~repro.bench.schema` — versioned structural validation of
+    those files (v2: first-class ``cycles``, cold/warm timing split,
+    run metadata);
+  * :mod:`~repro.bench.timing` — the cold/warm measurement primitive;
+  * :mod:`~repro.bench.diffing` — the baseline diff: exact on cycle
+    counts and integer derived values, percentage-banded on warm
+    wall-clock, fnmatch allowlist for intentional changes.
+
+The benchmark definitions themselves live in ``benchmarks/`` (the
+scripts declare cells; ``python -m benchmarks.run matrix`` assembles
+and runs the axes, ``python -m benchmarks.diff`` gates a fresh run
+against ``benchmarks/baseline/``).  See ``docs/benchmarks.md``.
+"""
+
+from repro.bench.diffing import (FAIL_KINDS, Finding, diff_reports,
+                                 parse_allowlist, regressions)
+from repro.bench.matrix import run_axis, run_cells
+from repro.bench.registry import (COORD_KEYS, KINDS, BenchContext, Cell,
+                                  CellResult, check_cells, coords)
+from repro.bench.report import (bench_meta, bench_path, build_report,
+                                cell_csv, load_report, write_report)
+from repro.bench.schema import (SCHEMA_VERSION, SchemaError,
+                                schema_problems, validate_report)
+from repro.bench.timing import Timing, measure
+
+__all__ = [
+    "BenchContext", "Cell", "CellResult", "COORD_KEYS", "KINDS",
+    "check_cells", "coords",
+    "run_axis", "run_cells",
+    "SCHEMA_VERSION", "SchemaError", "schema_problems", "validate_report",
+    "Timing", "measure",
+    "FAIL_KINDS", "Finding", "diff_reports", "parse_allowlist",
+    "regressions",
+    "bench_meta", "bench_path", "build_report", "cell_csv", "load_report",
+    "write_report",
+]

@@ -1,0 +1,57 @@
+"""Cold/warm wall-clock measurement for benchmark cells.
+
+The one timing bug this module exists to prevent: folding first-call
+JIT compilation into a steady-state number.  ``BENCH_compile.json``
+shipped a ~701ms ``us_per_call`` for ``compile/binsearch/kernel`` that
+was >99% trace-and-compile time — useless as a call-cost trajectory and
+noisy enough to drown any real regression.  :func:`measure` therefore
+always reports **both** sides of the split:
+
+  * ``us_cold`` — the very first call, compilation included.  This is
+    the user-visible latency of a cold cache and is worth tracking, but
+    only as itself, never blended into a mean.
+  * ``us_warm`` — best-of-``warm_reps`` after the cold call.  Best (not
+    mean) because wall-clock noise on a shared CI container is strictly
+    additive; the minimum is the stable lower envelope.
+
+Wall-clock transfers poorly between machines, so the regression gate
+(:mod:`repro.bench.diffing`) compares ``us_warm`` with a generous
+percentage band and never gates ``us_cold`` at all; simulator cycle
+counts are the exact-match signal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+__all__ = ["Timing", "measure"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """One cold/warm measurement, microseconds."""
+
+    us_cold: float
+    us_warm: float
+
+
+def measure(fn: Callable[[], object], *, warm_reps: int = 3) -> Timing:
+    """Time ``fn`` once cold (JIT included) then best-of-``warm_reps``.
+
+    ``fn``'s result is passed through ``jax.block_until_ready`` so
+    asynchronous dispatch cannot leak compute past the timer; non-array
+    results pass through untouched.
+    """
+    import jax  # lazy: diff-only consumers of repro.bench need no jax
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    us_cold = (time.perf_counter() - t0) * 1e6
+    best = float("inf")
+    for _ in range(max(1, warm_reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return Timing(us_cold=us_cold, us_warm=best * 1e6)

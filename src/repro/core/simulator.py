@@ -515,7 +515,7 @@ def _execute(ctx: _Ctx, inst: _Inst, eff: Any, t: float) -> Any:
         if ctx.trace is not None:
             ctx.trace.on_request(inst.name, c.name,
                                  _port_label(owner, c.port), t_issue, t_done)
-            ctx.trace.on_occupancy(inst.name, c.name, len(st.fifo))
+            ctx.trace.on_occupancy(inst.name, c.name, len(st.fifo), t)
         return None
     if isinstance(eff, Resp):
         st = inst.chan(eff.channel)
@@ -523,7 +523,7 @@ def _execute(ctx: _Ctx, inst: _Inst, eff: Any, t: float) -> Any:
         st.resps += 1
         if ctx.trace is not None:
             ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo))
+                                   len(st.fifo), t)
         return value
     if isinstance(eff, Enq):
         st = inst.chan(eff.channel)
@@ -531,7 +531,7 @@ def _execute(ctx: _Ctx, inst: _Inst, eff: Any, t: float) -> Any:
         st.enqs += 1
         if ctx.trace is not None:
             ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo))
+                                   len(st.fifo), t)
         return None
     if isinstance(eff, Deq):
         st = inst.chan(eff.channel)
@@ -539,7 +539,7 @@ def _execute(ctx: _Ctx, inst: _Inst, eff: Any, t: float) -> Any:
         st.deqs += 1
         if ctx.trace is not None:
             ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo))
+                                   len(st.fifo), t)
         return value
     if isinstance(eff, Store):
         port = eff.port
@@ -723,7 +723,7 @@ def _exec_ev(ctx: _Ctx, inst: _Inst, eff: Any, t: float,
         ev.append(st.pop_key)
         if ctx.trace is not None:
             ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo))
+                                   len(st.fifo), t)
         return value
     if cls is Req:
         c = eff.channel
@@ -744,7 +744,7 @@ def _exec_ev(ctx: _Ctx, inst: _Inst, eff: Any, t: float,
         ev.append(mem_key)
         if ctx.trace is not None:
             ctx.trace.on_request(inst.name, c.name, label, t_issue, t_done)
-            ctx.trace.on_occupancy(inst.name, c.name, len(st.fifo))
+            ctx.trace.on_occupancy(inst.name, c.name, len(st.fifo), t)
         return None
     if cls is Par:
         return tuple([_exec_ev(ctx, inst, sub, t, ev)
@@ -756,7 +756,7 @@ def _exec_ev(ctx: _Ctx, inst: _Inst, eff: Any, t: float,
         ev.append(st.push_key)
         if ctx.trace is not None:
             ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo))
+                                   len(st.fifo), t)
         return None
     if cls is Deq:
         st = _chan_ev(inst, eff.channel)
@@ -765,7 +765,7 @@ def _exec_ev(ctx: _Ctx, inst: _Inst, eff: Any, t: float,
         ev.append(st.pop_key)
         if ctx.trace is not None:
             ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo))
+                                   len(st.fifo), t)
         return value
     if cls is Store:
         port = eff.port

@@ -192,7 +192,11 @@ class Tracer:
         self._port_issue(port, t_issue)
 
     def on_occupancy(self, instance: str, channel: str,
-                     depth: int) -> None:
+                     depth: int, t: float = 0.0) -> None:
+        # ``t`` is the scheduler time of the enq/deq/req/resp event that
+        # changed the depth; the summary aggregates are time-free, but
+        # subclasses (repro.core.waveform.WaveformTracer) keep the full
+        # (t, depth) timeline for per-cycle checks and VCD export.
         cs = self._chan(instance, channel)
         cs.events += 1
         cs.occ_sum += depth

@@ -1245,6 +1245,7 @@ def run_workload(
     engine: str = "event",
     trace: bool = False,
     trace_bin_cycles: int = 64,
+    tracer: Optional[Tracer] = None,
 ) -> WorkloadReport:
     """Build and simulate one (benchmark, config) cell of Table 1/3.
 
@@ -1259,13 +1260,19 @@ def run_workload(
     carries a :class:`repro.core.trace.TraceSummary`; multi-phase
     benchmarks (mergesort, multispmv) accumulate across phases with
     per-phase clocks restarting at zero.
+
+    An explicit ``tracer`` instance (e.g. a
+    :class:`repro.core.waveform.WaveformTracer` for full per-cycle
+    timelines and VCD export) overrides the ``trace``/``trace_bin_cycles``
+    construction and is driven through the same hooks.
     """
     if config not in CONFIGS:
         raise ValueError(f"unknown config {config!r}")
     cap = None if cap_slack is None else max(1, rif + cap_slack)
     mem_factory = _mem_factory_for(mem, latency, max_outstanding,
                                    MOMS_PORTS.get(benchmark, ()))
-    tracer = Tracer(trace_bin_cycles) if trace else None
+    if tracer is None:
+        tracer = Tracer(trace_bin_cycles) if trace else None
 
     def _sim(prog, mems):
         return simulate(prog, mems, tracer=tracer, engine=engine)
@@ -1447,6 +1454,7 @@ def run_workload_multi(
     trace: bool = False,
     trace_bin_cycles: int = 64,
     engine: str = "event",
+    tracer: Optional[Tracer] = None,
 ) -> MultiWorkloadReport:
     """Simulate ``n_instances`` concurrent tenants of one benchmark
     sharing the irregular-data port(s) of a single memory system.
@@ -1479,7 +1487,8 @@ def run_workload_multi(
     cap = None if cap_slack is None else max(1, rif + cap_slack)
     mem_factory = _mem_factory_for(mem, latency, max_outstanding,
                                    MOMS_PORTS.get(benchmark, ()))
-    tracer = Tracer(trace_bin_cycles) if trace else None
+    if tracer is None:
+        tracer = Tracer(trace_bin_cycles) if trace else None
     shared_ports = MULTI_SHARED_PORTS[benchmark]
 
     if benchmark in ("binsearch", "binsearch_for", "hashtable"):

@@ -1,0 +1,241 @@
+"""Per-cycle set/check DSL over the DAE simulator.
+
+Golden-trace fixtures pin *aggregates* (occupancy means, histograms);
+this DSL pins *moments*: "at cycle 150 the load ring is full", "by the
+time the first result stores, the table port has issued 16 reads".  A
+scheduler regression that preserves the aggregates but shifts when
+things happen — exactly the class of bug a bit-exact dual-engine
+design must guard against — fails these checks by name.
+
+Shape of a script (record-then-replay: the engine is deterministic, so
+running once under a :class:`~repro.core.waveform.WaveformTracer` and
+replaying the timeline with a cycle cursor is equivalent to true
+lock-step co-simulation, without restructuring the engine loop)::
+
+    s = (SimScript("binsearch", "rhls_dec")
+         .set(scale="small", latency=100, rif=8)
+         .run())
+    s.goto(150)
+    s.check_occupancy("bs_load", 8)          # ring full while hiding latency
+    s.check_issues("table", at_least=16)
+    s.step(100).check_occupancy("bs_load", (1, 8))   # bounded, not drained
+    s.label("steady")
+    ...
+    s.check_cycles(3104)
+    s.write_vcd(tmp_path / "binsearch.vcd")  # debuggable in GTKWave/Surfer
+
+``set`` fixes the workload inputs (any :func:`run_workload` kwarg),
+``step``/``goto``/``label`` move a named-cycle cursor, ``check_*``
+assert against the recorded waveforms and raise :class:`CheckFailed`
+with the cycle and signal spelled out.  Raw (non-workload) programs
+enter through :meth:`SimScript.from_program`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple, Union
+
+from repro.core.waveform import WaveformTracer
+
+__all__ = ["CheckFailed", "SimScript"]
+
+Expect = Union[int, Tuple[int, int], Callable[[int], bool]]
+
+
+class CheckFailed(AssertionError):
+    """A per-cycle check did not hold; the message names cycle+signal."""
+
+
+def _match(expect: Expect, actual: int) -> bool:
+    if callable(expect):
+        return bool(expect(actual))
+    if isinstance(expect, tuple):
+        lo, hi = expect
+        return lo <= actual <= hi
+    return actual == expect
+
+
+def _describe(expect: Expect) -> str:
+    if callable(expect):
+        return getattr(expect, "__name__", "predicate")
+    if isinstance(expect, tuple):
+        return f"in [{expect[0]}, {expect[1]}]"
+    return f"== {expect}"
+
+
+class SimScript:
+    """One recorded simulation plus a cycle cursor for per-cycle checks."""
+
+    def __init__(self, benchmark: str, config: str, **params):
+        self._benchmark = benchmark
+        self._config = config
+        self._params: Dict[str, object] = dict(params)
+        self._raw = None           # (program, memories, kwargs) alternative
+        self._tracer: Optional[WaveformTracer] = None
+        self._report = None
+        self._cursor = 0
+        self._labels: Dict[str, int] = {}
+
+    @classmethod
+    def from_program(cls, program, memories, **sim_kwargs) -> "SimScript":
+        """Script a raw :class:`DaeProgram` via :func:`simulate` instead
+        of a named workload."""
+        self = cls.__new__(cls)
+        self._benchmark = self._config = None
+        self._params = {}
+        self._raw = (program, memories, dict(sim_kwargs))
+        self._tracer = None
+        self._report = None
+        self._cursor = 0
+        self._labels = {}
+        return self
+
+    # -- set: fix the inputs ------------------------------------------------
+
+    def set(self, **params) -> "SimScript":
+        """Set workload inputs/knobs (``scale``, ``latency``, ``rif``,
+        ``cap_slack``, ``engine``, ``seed``, ...) before the run."""
+        if self._tracer is not None:
+            raise CheckFailed("set() after run(): inputs are fixed once "
+                              "the engine has executed")
+        self._params.update(params)
+        return self
+
+    # -- run: record the full timeline --------------------------------------
+
+    def run(self) -> "SimScript":
+        if self._tracer is not None:
+            return self
+        self._tracer = WaveformTracer()
+        if self._raw is not None:
+            from repro.core.simulator import simulate
+            program, memories, kw = self._raw
+            self._report = simulate(program, memories, tracer=self._tracer,
+                                    **kw)
+        else:
+            from repro.core.workloads import run_workload
+            self._report = run_workload(self._benchmark, self._config,
+                                        tracer=self._tracer, **self._params)
+        return self
+
+    @property
+    def tracer(self) -> WaveformTracer:
+        self.run()
+        assert self._tracer is not None
+        return self._tracer
+
+    @property
+    def report(self):
+        """The underlying WorkloadReport / EngineResult."""
+        self.run()
+        return self._report
+
+    @property
+    def cycles(self) -> int:
+        return int(self.report.cycles)
+
+    # -- step/goto/label: the cycle cursor ----------------------------------
+
+    @property
+    def cursor(self) -> int:
+        return self._cursor
+
+    def step(self, n: int = 1) -> "SimScript":
+        """Advance the cursor ``n`` cycles."""
+        if n < 0:
+            raise ValueError("step() goes forward; use goto() to rewind")
+        self.run()
+        self._cursor += n
+        return self
+
+    def goto(self, where: Union[int, str]) -> "SimScript":
+        """Move the cursor to an absolute cycle or a named label."""
+        self.run()
+        self._cursor = self.at(where)
+        return self
+
+    def label(self, name: str, cycle: Optional[int] = None) -> "SimScript":
+        """Name the current cursor position (or an explicit cycle)."""
+        self.run()
+        self._labels[name] = self._cursor if cycle is None else int(cycle)
+        return self
+
+    def at(self, where: Union[int, str]) -> int:
+        if isinstance(where, str):
+            if where not in self._labels:
+                raise CheckFailed(f"unknown cycle label {where!r} "
+                                  f"(have {sorted(self._labels)})")
+            return self._labels[where]
+        return int(where)
+
+    # -- check: assertions against the recorded waveforms --------------------
+
+    def _resolve(self, at: Optional[Union[int, str]]) -> int:
+        self.run()
+        return self._cursor if at is None else self.at(at)
+
+    def check_occupancy(self, channel: str, expect: Expect,
+                        at: Optional[Union[int, str]] = None) -> "SimScript":
+        """FIFO depth of ``channel`` at the cursor (or ``at``)."""
+        cycle = self._resolve(at)
+        try:
+            actual = self.tracer.occupancy_at(channel, cycle)
+        except KeyError:
+            raise CheckFailed(
+                f"channel {channel!r} never appeared in the trace "
+                f"(have {list(self.tracer.channels())})") from None
+        if not _match(expect, actual):
+            raise CheckFailed(
+                f"occupancy({channel!r}) at cycle {cycle}: got {actual}, "
+                f"expected {_describe(expect)}")
+        return self
+
+    def check_peak_occupancy(self, channel: str,
+                             expect: Expect) -> "SimScript":
+        """Whole-run peak FIFO depth of ``channel``."""
+        try:
+            actual = self.tracer.peak_occupancy(channel)
+        except KeyError:
+            raise CheckFailed(
+                f"channel {channel!r} never appeared in the trace "
+                f"(have {list(self.tracer.channels())})") from None
+        if not _match(expect, actual):
+            raise CheckFailed(
+                f"peak occupancy({channel!r}): got {actual}, "
+                f"expected {_describe(expect)}")
+        return self
+
+    def check_issues(self, port: str, expect: Expect = None, *,
+                     at_least: Optional[int] = None,
+                     at: Optional[Union[int, str]] = None) -> "SimScript":
+        """Cumulative issues (reads+writes) on ``port`` up to the cursor."""
+        cycle = self._resolve(at)
+        actual = self.tracer.issues_until(port, cycle)
+        if at_least is not None:
+            if actual < at_least:
+                raise CheckFailed(
+                    f"issues({port!r}) by cycle {cycle}: got {actual}, "
+                    f"expected >= {at_least}")
+            return self
+        if expect is None:
+            raise TypeError("check_issues needs expect or at_least")
+        if not _match(expect, actual):
+            raise CheckFailed(
+                f"issues({port!r}) by cycle {cycle}: got {actual}, "
+                f"expected {_describe(expect)}")
+        return self
+
+    def check_cycles(self, expect: Expect) -> "SimScript":
+        """Total simulated cycles of the run."""
+        if not _match(expect, self.cycles):
+            raise CheckFailed(f"run took {self.cycles} cycles, expected "
+                              f"{_describe(expect)}")
+        return self
+
+    # -- export ---------------------------------------------------------------
+
+    def to_vcd(self, **kw) -> str:
+        return self.tracer.to_vcd(**kw)
+
+    def write_vcd(self, path, **kw) -> None:
+        self.tracer.write_vcd(path, **kw)

@@ -1,0 +1,331 @@
+"""Tuned-vs-untuned dispatch over EVERY ``KERNEL_DIMS`` op.
+
+The PR 5 SPMV bug class: a tuner persists a winner under one cache key,
+but the dispatcher's ``None``-knob lookup happens under *different*
+dims (SPMV stores at CSR dims, ``dae_spmv`` looks up at the converted
+BSR dims), so the tuned config silently never dispatches and the
+analytic ``plan_rif`` fallback runs instead.  Wall-clock benchmarks
+cannot catch that — the fallback also works, just slower.
+
+This file closes the class structurally:
+
+  * one spy case per ``KERNEL_DIMS`` op (a completeness test pins the
+    set, so adding an op without dispatch coverage fails CI);
+  * each case runs the same call twice — cold cache (untuned), then
+    with a distinctively-knobbed ``CacheEntry`` planted under the
+    *canonical* key — and asserts at the ``_k.<kernel>`` seam that the
+    planted knobs actually reach the kernel, and that they *differ*
+    from the untuned run (no vacuous pass when a default happens to
+    equal the plant);
+  * the SPMV case plants a decoy ``rif`` under the CSR key and the
+    real one only under ``measure.alias_keys`` (the BSR mirror), so a
+    regression that re-introduces the wrong-key lookup is caught by
+    value, not by absence.
+
+Everything runs in interpret mode at tiny odd shapes (fresh jit traces,
+so the spies fire at trace time with the static knob values).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.tune import CacheEntry, default_cache
+from repro.tune.cache import make_key
+from repro.tune.runners import KERNEL_DIMS, backend_tag, kernel_runner
+
+
+def _plant(op, dims, dtype, config):
+    key = make_key(op, dims, dtype, backend_tag(True), "wallclock")
+    default_cache().put(key, CacheEntry(config=dict(config), score=1.0))
+
+
+def _spy(monkeypatch, module, name, record, keys):
+    """Wrap ``module.<name>`` to record the knob kwargs in ``keys``."""
+    real = getattr(module, name)
+
+    def spy(*a, **kw):
+        record.append({k: kw[k] for k in keys})
+        return real(*a, **kw)
+
+    monkeypatch.setattr(module, name, spy)
+
+
+def _fresh_traces(*jitted):
+    """Spies fire at trace time; drop any executable another test cached
+    for the same (shapes, statics) so every call here retraces."""
+    for fn in jitted:
+        fn.clear_cache()
+
+
+def _tuned_untuned(call, plant, record):
+    """Run ``call`` cold-cache, then with ``plant()`` applied; return the
+    last-recorded knobs of each run."""
+    call()
+    assert record, "spy never fired on the untuned call (stale jit trace?)"
+    untuned = record[-1]
+    plant()
+    record.clear()
+    call()
+    assert record, "spy never fired on the tuned call (stale jit trace?)"
+    return record[-1], untuned
+
+
+# -- one case per op ----------------------------------------------------------
+#
+# Each case returns (tuned, untuned, expected): the knob dicts the spy saw
+# and the planted knobs after dispatcher-side coercions.
+
+
+def _case_dae_gather(monkeypatch):
+    import jax.numpy as jnp
+    import repro.kernels.dae_gather.ops as ops
+    n, d, m = 112, 128, 48
+    _fresh_traces(ops._dae_gather_impl)
+    r = np.random.default_rng(0)
+    table = jnp.asarray(r.standard_normal((n, d)), jnp.float32)
+    idx = jnp.asarray(r.integers(0, n, m), jnp.int32)
+    rec = []
+    _spy(monkeypatch, ops._k, "gather_rif", rec, ("chunk", "rif"))
+    # the cold-cache default is method='pipelined'; spy that seam too so
+    # the untuned run records *something* comparable
+    _spy(monkeypatch, ops._k, "gather_pipelined", rec, ("block_d",))
+    tuned, untuned = _tuned_untuned(
+        lambda: ops.dae_gather(table, idx, interpret=True),
+        lambda: _plant("dae_gather", (n, d, m), "float32",
+                       {"method": "rif", "chunk": 16, "rif": 5}),
+        rec)
+    return tuned, untuned, {"chunk": 16, "rif": 5}
+
+
+def _case_dae_merge(monkeypatch):
+    import jax.numpy as jnp
+    import repro.kernels.dae_merge.ops as ops
+    n, m = 88, 72
+    _fresh_traces(ops._merge_impl)
+    r = np.random.default_rng(0)
+    a = jnp.sort(jnp.asarray(r.standard_normal(n), jnp.float32))
+    b = jnp.sort(jnp.asarray(r.standard_normal(m), jnp.float32))
+    rec = []
+    _spy(monkeypatch, ops._k, "merge_tiles", rec, ("tile", "rif"))
+    tuned, untuned = _tuned_untuned(
+        lambda: ops.merge_sorted(a, b, interpret=True),
+        lambda: _plant("dae_merge", (n, m), "float32",
+                       {"tile": 32, "rif": 3}),
+        rec)
+    # tile 32 is already a power of two, so the bitonic coercion is a no-op
+    return tuned, untuned, {"tile": 32, "rif": 3}
+
+
+def _case_flash_attention(monkeypatch):
+    import jax.numpy as jnp
+    import repro.kernels.flash_attention.ops as ops
+    sq, sk, d = 48, 80, 64
+    _fresh_traces(ops._flash_impl)
+    r = np.random.default_rng(0)
+    q = jnp.asarray(r.standard_normal((1, 4, sq, d)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 2, sk, d)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, 2, sk, d)), jnp.float32)
+    rec = []
+    _spy(monkeypatch, ops._k, "flash", rec, ("bq", "bk"))
+    tuned, untuned = _tuned_untuned(
+        lambda: ops.flash_attention(q, k, v, interpret=True),
+        lambda: _plant("flash_attention", (sq, sk, d), "float32",
+                       {"bq": 16, "bk": 16}),
+        rec)
+    return tuned, untuned, {"bq": 16, "bk": 16}
+
+
+def _case_flash_decode(monkeypatch):
+    import jax.numpy as jnp
+    import repro.kernels.flash_attention.ops as ops
+    s, d = 96, 64
+    _fresh_traces(ops._decode_impl)
+    r = np.random.default_rng(0)
+    q = jnp.asarray(r.standard_normal((1, 2, d)), jnp.float32)
+    kc = jnp.asarray(r.standard_normal((1, 1, s, d)), jnp.float32)
+    vc = jnp.asarray(r.standard_normal((1, 1, s, d)), jnp.float32)
+    lens = jnp.asarray([s], jnp.int32)
+    rec = []
+    _spy(monkeypatch, ops._k, "flash_decode", rec, ("bk", "rif"))
+    tuned, untuned = _tuned_untuned(
+        lambda: ops.flash_decode(q, kc, vc, lens, interpret=True),
+        lambda: _plant("flash_decode", (s, d), "float32",
+                       {"bk": 32, "rif": 3}),
+        rec)
+    return tuned, untuned, {"bk": 32, "rif": 3}
+
+
+def _case_flash_decode_paged(monkeypatch):
+    import jax.numpy as jnp
+    from repro.core.pipeline import plan_rif
+    import repro.kernels.flash_attention.ops as ops
+    page, d, npb = 32, 64, 2
+    _fresh_traces(ops._decode_paged_impl)
+    r = np.random.default_rng(0)
+    q = jnp.asarray(r.standard_normal((1, 2, d)), jnp.float32)
+    kp = jnp.asarray(r.standard_normal((npb, 1, page, d)), jnp.float32)
+    vp = kp + 1.0
+    pt = jnp.arange(npb, dtype=jnp.int32).reshape(1, npb)
+    lens = jnp.asarray([npb * page], jnp.int32)
+    # rif is the only knob: the plant must differ from the analytic
+    # fallback or the case proves nothing
+    assert plan_rif(page * d * 4).rif != 3
+    rec = []
+    _spy(monkeypatch, ops._k, "flash_decode_paged", rec, ("rif",))
+    tuned, untuned = _tuned_untuned(
+        lambda: ops.flash_decode_paged(q, kp, vp, pt, lens, interpret=True),
+        lambda: _plant("flash_decode_paged", (page, d), "float32",
+                       {"rif": 3}),
+        rec)
+    return tuned, untuned, {"rif": 3}
+
+
+def _case_grouped_matmul(monkeypatch):
+    import jax.numpy as jnp
+    import repro.kernels.grouped_matmul.ops as ops
+    t, d, f = 128, 256, 256
+    _fresh_traces(ops._gmm_impl)
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.standard_normal((t, d)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((2, d, f)), jnp.float32)
+    blk = jnp.zeros((t // 128,), jnp.int32)
+    rec = []
+    _spy(monkeypatch, ops._k, "gmm", rec, ("bf", "bd"))
+    tuned, untuned = _tuned_untuned(
+        lambda: ops.grouped_matmul(x, w, blk, interpret=True),
+        lambda: _plant("grouped_matmul", (t, d, f), "float32",
+                       {"bf": 64, "bd": 128}),
+        rec)
+    # both plants survive the min(knob, round_up(dim, 128)) clamps at
+    # these dims
+    return tuned, untuned, {"bf": 64, "bd": 128}
+
+
+def _case_batched_searchsorted(monkeypatch):
+    import jax.numpy as jnp
+    import repro.kernels.dae_chase.ops as ops
+    n, m = 176, 24
+    _fresh_traces(ops._searchsorted_impl)
+    r = np.random.default_rng(0)
+    table = jnp.sort(jnp.asarray(r.integers(0, 1 << 20, n), jnp.int32))
+    keys = jnp.asarray(r.integers(0, 1 << 20, m), jnp.int32)
+    rec = []
+    _spy(monkeypatch, ops._k, "searchsorted_blocks", rec, ("chunk", "rif"))
+    tuned, untuned = _tuned_untuned(
+        lambda: ops.batched_searchsorted(table, keys, interpret=True),
+        lambda: _plant("batched_searchsorted", (n, m), "int32",
+                       {"block": 32, "chunk": 8, "rif": 3}),
+        rec)
+    return tuned, untuned, {"chunk": 8, "rif": 3}
+
+
+def _case_hash_lookup(monkeypatch):
+    import jax.numpy as jnp
+    import repro.kernels.dae_chase.ops as ops
+    n, m, chain = 80, 16, 4
+    _fresh_traces(ops._hash_lookup_impl)
+    r = np.random.default_rng(0)
+    ek = jnp.asarray(np.arange(n), jnp.int32)
+    ev = jnp.asarray(r.integers(0, 1 << 16, n), jnp.int32)
+    en = jnp.asarray([(i + 1) if (i + 1) % chain else -1 for i in range(n)],
+                     jnp.int32)
+    heads = jnp.asarray(r.integers(0, n // chain, m) * chain, jnp.int32)
+    keys = heads + jnp.asarray(r.integers(0, chain, m), jnp.int32)
+    rec = []
+    _spy(monkeypatch, ops._k, "hash_probe", rec, ("chunk", "rif"))
+    tuned, untuned = _tuned_untuned(
+        lambda: ops.hash_lookup(ek, ev, en, heads, keys, max_steps=chain,
+                                interpret=True),
+        lambda: _plant("hash_lookup", (n, m), "int32",
+                       {"chunk": 8, "rif": 3}),
+        rec)
+    return tuned, untuned, {"chunk": 8, "rif": 3}
+
+
+def _case_dae_spmv(monkeypatch):
+    """The alias-key case (the original PR 5 gap, now by value).
+
+    ``csr_to_bsr`` stores/looks up the block shape under the CSR dims;
+    ``dae_spmv`` looks up ``rif`` under the *converted* BSR dims that
+    only ``measure.alias_keys`` knows how to mirror.  Plant a decoy rif
+    under the CSR key and the real one under the alias keys: the spy
+    must see the alias value — seeing the decoy (or the ``plan_rif``
+    fallback) means the wrong-key lookup came back.
+    """
+    import jax.numpy as jnp
+    from repro.core.pipeline import plan_rif
+    import repro.kernels.dae_spmv.ops as ops
+    nrows, ncols, nnz = 16, 256, 64
+    _fresh_traces(ops._spmv_impl)
+    best = {"bm": 4, "bk": 128, "rif": 5}
+    assert plan_rif(best["bk"] * 4).rif != best["rif"]
+
+    # same construction as runners._spmv_measure (seed 0), so the BSR
+    # dims of this data match what measure.alias_keys mirrors
+    r = np.random.default_rng(0)
+    counts = r.multinomial(nnz, np.ones(nrows) / nrows)
+    rows = np.zeros(nrows + 1, np.int64)
+    rows[1:] = np.cumsum(counts)
+    cols = r.integers(0, ncols, nnz)
+    val = r.standard_normal(nnz).astype(np.float32)
+    vec = jnp.asarray(r.standard_normal(ncols), jnp.float32)
+
+    rec = []
+    _spy(monkeypatch, ops._k, "bsr_spmv", rec, ("rif",))
+
+    def call():
+        vb, ri, ci, _, nrb = ops.csr_to_bsr(rows, cols, val, ncols)
+        out = ops.dae_spmv(jnp.asarray(vb), jnp.asarray(ri), jnp.asarray(ci),
+                           vec, nrb, interpret=True)
+        return vb, out
+
+    # untuned: block shape falls back to (8, 128), rif to plan_rif
+    vb_untuned, _ = call()
+    assert rec and vb_untuned.shape[1:] == (8, 128)
+    untuned = rec[-1]
+
+    measure, _key, _dims = kernel_runner("dae_spmv", (nrows, ncols, nnz),
+                                         interpret=True)
+    _plant("dae_spmv", (nrows, ncols, nnz), "float32", {**best, "rif": 9})
+    for alias in measure.alias_keys(best):
+        default_cache().put(alias, CacheEntry(config=dict(best), score=1.0))
+
+    rec.clear()
+    vb_tuned, _ = call()
+    assert rec, "spy never fired on the tuned call"
+    # the planted block shape dispatched through the CSR key...
+    assert vb_tuned.shape[1:] == (best["bm"], best["bk"])
+    # ...and the rif through the BSR alias key, not the CSR decoy
+    assert rec[-1]["rif"] != 9, "rif came from the CSR key (alias-key gap)"
+    return rec[-1], untuned, {"rif": best["rif"]}
+
+
+_CASES = {
+    "dae_gather": _case_dae_gather,
+    "dae_merge": _case_dae_merge,
+    "flash_attention": _case_flash_attention,
+    "flash_decode": _case_flash_decode,
+    "flash_decode_paged": _case_flash_decode_paged,
+    "grouped_matmul": _case_grouped_matmul,
+    "batched_searchsorted": _case_batched_searchsorted,
+    "hash_lookup": _case_hash_lookup,
+    "dae_spmv": _case_dae_spmv,
+}
+
+
+def test_every_kernel_dims_op_has_a_dispatch_case():
+    """Adding a tunable op without tuned-dispatch coverage fails here."""
+    assert set(_CASES) == set(KERNEL_DIMS)
+
+
+@pytest.mark.parametrize("op", sorted(_CASES))
+def test_tuned_knobs_actually_dispatch(op, monkeypatch):
+    tuned, untuned, expected = _CASES[op](monkeypatch)
+    assert tuned == expected, (
+        f"{op}: planted cache knobs did not reach the kernel "
+        f"(got {tuned}, planted {expected})")
+    assert tuned != untuned, (
+        f"{op}: tuned and untuned runs dispatched identically ({tuned}) — "
+        f"the plant is not distinctive, the case proves nothing")
