@@ -43,7 +43,7 @@ from repro.bench import (Finding, bench_path, diff_reports, load_report,
 from repro.bench.schema import SchemaError
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
-DEFAULT_AXES = ("sim", "kernels", "compile")
+DEFAULT_AXES = ("sim", "kernels", "compile", "serve")
 DEFAULT_BASELINE = REPO_ROOT / "benchmarks" / "baseline"
 DEFAULT_ALLOWLIST = REPO_ROOT / "benchmarks" / "diff_allowlist.txt"
 

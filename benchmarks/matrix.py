@@ -1,6 +1,6 @@
 """Assemble and run the full benchmark matrix.
 
-Three axes, one ``BENCH_<axis>.json`` each (written at the repo root,
+Four axes, one ``BENCH_<axis>.json`` each (written at the repo root,
 diffed against ``benchmarks/baseline/`` by ``benchmarks.diff``):
 
   * ``sim``     — pure-simulator cells: Table 1/2/3 and Fig. 4 grids
@@ -10,7 +10,12 @@ diffed against ``benchmarks/baseline/`` by ``benchmarks.diff``):
   * ``kernels`` — decoupled-kernel microbenches, tuned-vs-default
                   pairs, chase decoupled-vs-XLA, compiled-vs-hand;
   * ``compile`` — every ``repro.compile`` target, pipeline + kernel
-                  with the cold/warm split.
+                  with the cold/warm split;
+  * ``serve``   — the serving pipeline: open-loop arrival traces at
+                  slots=64 on the paged-KV loop (tokens/s, TTFT
+                  percentiles, prefix-hit/page-allocation counts),
+                  paged-vs-contiguous bit-parity per attention family,
+                  and the prefix-reuse allocation gate.
 
 The runner executes **every** registered cell of each requested axis —
 cell selection is deliberately not a feature (see
@@ -28,7 +33,7 @@ from repro.bench import BenchContext, Cell, CellResult, coords, run_axis
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 
-AXES = ("sim", "kernels", "compile")
+AXES = ("sim", "kernels", "compile", "serve")
 
 # engine-parity cells: both schedulers must report the same cycles for
 # the same cell; the diff gate pins each engine's count independently,
@@ -107,6 +112,9 @@ def collect(axis: str, ctx: BenchContext) -> List[Cell]:
     if axis == "compile":
         from benchmarks import compile_bench
         return compile_bench.cells(ctx)
+    if axis == "serve":
+        from benchmarks import serve_bench
+        return serve_bench.cells(ctx)
     raise ValueError(f"unknown axis {axis!r} (have {AXES})")
 
 

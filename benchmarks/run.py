@@ -20,12 +20,15 @@
                       N-tenant hashtable cell (--smoke gates the event
                       engine at >=5x on the contended N=96 cell)
     serve-bench       decoupled Access/Execute serving pipeline vs the
-                      coupled legacy loop: batch_slots x prompt mixes x
-                      archetypes, tokens/s + TTFT + channel occupancy
-                      (--smoke gates >=5x on the mixed slots=8 cell)
+                      coupled legacy loop (batch_slots x prompt mixes x
+                      archetypes, tokens/s + TTFT + channel occupancy;
+                      --smoke gates >=5x on the mixed slots=8 cell) plus
+                      the paged-KV open-loop cells: slots=64 seeded
+                      Poisson/bursty arrival traces with prefix reuse,
+                      TTFT p50/p95/p99 measured from arrival
     matrix            the declarative benchmark matrix (repro.bench):
                       runs EVERY registered cell of the sim/kernels/
-                      compile axes and writes one schema-validated
+                      compile/serve axes and writes one schema-validated
                       BENCH_<axis>.json per axis at the repo root;
                       gate a run against the committed baseline with
                       `python -m benchmarks.diff` (--smoke for CI scale)

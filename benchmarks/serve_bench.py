@@ -1,29 +1,46 @@
-"""Serving benchmark: decoupled Access/Execute pipeline vs the coupled
-legacy loop.
+"""Serving benchmark: paged-KV decoupled pipeline, open-loop arrival
+traces, and the legacy-loop comparison sweep.
 
-Sweeps batch_slots x prompt-length mixes x model archetypes (dense,
-moe, rwkv, hymba hybrid) on CPU/interpret and reports, per cell:
+Two consumers:
 
-  * ``tok_s``     — generated tokens per second of the decoupled loop;
-  * ``legacy``    — the same workload through the coupled loop (which
-                    prefills one token per full-batch step);
-  * ``speedup``   — tok_s over legacy;
-  * ``ttft_ms``   — mean / p95 time-to-first-token of the decoupled
-                    loop (the latency the chunked interleave protects);
-  * ``occ``       — mean/max occupancy of the serve channels (admit,
-                    prefill_done, free_slots) from the trace subsystem.
+  * ``python -m benchmarks.run serve`` — the CSV sweep: decoupled
+    Access/Execute loop vs the coupled legacy loop across batch_slots x
+    prompt mixes x model archetypes, plus the paged open-loop cells;
+  * ``cells(ctx)`` — the ``serve`` axis of the benchmark matrix
+    (schema-v2 ``BENCH_serve.json``, gated by ``benchmarks.diff``).
 
-A parity cell per arch (one slot, one request — the only regime where
-the legacy loop computes correct logits) asserts the two loops'
-greedy outputs are bit-identical, and the slots=8 mixed cell gates the
-decoupled loop at >= 5x legacy tokens/s (the ISSUE 4 acceptance bar).
-``--smoke`` shrinks the sweep to the dense arch so CI exercises the
-gate on every push in seconds.
+The matrix cells are the load-bearing ones:
+
+  * ``serve/open/{poisson,bursty}/paged/s64`` — slots=64 under a seeded
+    open-loop arrival trace (Poisson / bursty) of prompts sharing a
+    page-aligned system prefix.  The Poisson cell runs the *same trace*
+    through the contiguous loop and asserts the paged loop (a) returns
+    bit-identical outputs, (b) sustains >= the contiguous tokens/s, and
+    (c) admitted a concurrent reservation footprint
+    (sum of prompt+max_new over live slots) larger than its physical
+    page pool — the oversubscription a contiguous reservation allocator
+    cannot express.  TTFT p50/p95/p99 are measured from each request's
+    arrival via the shared linear-interpolated percentile helper
+    (``repro.bench.percentiles``).
+  * ``serve/parity/<arch>`` — closed-loop paged-vs-contiguous greedy
+    bit-parity per attention family (GQA dense, MoE, MLA) and the
+    recurrent fallback (rwkv, where ``PagedServeLoop`` must detect the
+    missing paged primitives and serve contiguously).
+  * ``serve/prefix/qwen3-4b`` — the same prompt served twice: the
+    second run must return identical tokens with strictly fewer page
+    allocations (prefix adoption).
+
+Determinism discipline: integer ``derived`` values (request/token
+counts, prefix hits, page allocations) are exact-diffed against the
+committed baseline, so every int reported here is structural —
+timing-dependent measurements (tokens/s, TTFT quantiles) are floats,
+which the diff treats as informational.
 """
 
 from __future__ import annotations
 
 import time
+from typing import List
 
 import numpy as np
 
@@ -42,6 +59,19 @@ MAX_NEW = 16
 N_REQUESTS = 12
 CHUNK = 16
 
+# paged open-loop cells (slots >= 64 is the ROADMAP's serving regime)
+OPEN_SLOTS = 64
+OPEN_N = 64                # trace length
+PAGE = 8
+S_LOG = 96                 # per-slot logical horizon (s_max)
+S_PHYS = 48                # physical pool: OPEN_SLOTS * S_PHYS tokens
+PREFIX_LEN = 64            # shared system prefix (page-aligned)
+TAIL_LEN = 4               # unique per-request tail
+OPEN_MAX_NEW = 8
+# parity cells cover every attention family plus the recurrent fallback
+PARITY_ARCHS = ("qwen3-4b", "granite-moe-3b-a800m", "minicpm3-4b",
+                "rwkv6-1.6b")
+
 
 def _prompts(mix: str, n: int, vocab: int, seed: int = 0):
     lo, hi = MIXES[mix]
@@ -56,13 +86,40 @@ def _requests(mix: str, vocab: int):
             for i, p in enumerate(_prompts(mix, N_REQUESTS, vocab))]
 
 
+def poisson_arrivals(n: int, mean_gap_s: float, rng) -> List[float]:
+    """Seeded open-loop Poisson process: exponential interarrivals."""
+    return list(np.cumsum(rng.exponential(mean_gap_s, size=n)))
+
+
+def bursty_arrivals(n: int, burst: int, gap_s: float, rng) -> List[float]:
+    """Bursts of ``burst`` near-simultaneous arrivals, ``gap_s`` apart
+    (with ~0.1ms in-burst jitter so arrival order is still seeded)."""
+    out = []
+    for i in range(n):
+        out.append((i // burst) * gap_s + rng.uniform(0, 1e-4))
+    return sorted(out)
+
+
 def _occ_summary(trace) -> str:
     occ = trace.channel_occupancy()
     return ",".join(f"{name.rsplit('/', 1)[-1]}:{mean:.1f}/{mx}"
                     for name, (mean, mx) in sorted(occ.items()))
 
 
+def _model(arch):
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    cfg = get_config(arch, smoke=True)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
 def _bench_cell(cfg, bundle, params, mix, slots, s_max):
+    from repro.bench import percentiles
     from repro.core.trace import Tracer
     from repro.runtime.serve_loop import LegacyServeLoop, Request, ServeLoop
 
@@ -83,9 +140,8 @@ def _bench_cell(cfg, bundle, params, mix, slots, s_max):
     results = loop.run(reqs)
     dt = time.perf_counter() - t0
     toks = sum(len(v) for v in results.values())
-    ttft = sorted(loop.stats.ttft[r.rid] for r in reqs)
-    ttft_mean = 1e3 * sum(ttft) / len(ttft)
-    ttft_p95 = 1e3 * ttft[min(len(ttft) - 1, int(0.95 * len(ttft)))]
+    ttft = [loop.stats.ttft[r.rid] for r in reqs]
+    pct = percentiles(ttft, (50.0, 95.0, 99.0))
 
     LegacyServeLoop(cfg, bundle, params, batch_slots=slots,
                     s_max=s_max).run(warm())
@@ -101,8 +157,8 @@ def _bench_cell(cfg, bundle, params, mix, slots, s_max):
         "tok_s": toks / dt,
         "legacy_tok_s": toks_l / dt_l,
         "speedup": (toks / dt) / (toks_l / dt_l),
-        "ttft_mean_ms": ttft_mean,
-        "ttft_p95_ms": ttft_p95,
+        "ttft_mean_ms": 1e3 * sum(ttft) / len(ttft),
+        "ttft_p95_ms": 1e3 * pct["p95"],
         "occ": _occ_summary(tracer.summary()),
     }
 
@@ -123,12 +179,239 @@ def _parity_cell(cfg, bundle, params, s_max) -> None:
             f"{cfg.arch}: decoupled {out_new} != legacy {out_leg}")
 
 
+# ---------------------------------------------------------------------------
+# Paged open-loop cells
+# ---------------------------------------------------------------------------
+
+
+def _open_trace(vocab: int, arrivals: List[float], rng):
+    """Shared system prefix + unique tails — the prefix-cache workload."""
+    from repro.runtime.serve_loop import Request
+
+    prefix = rng.integers(0, vocab, size=PREFIX_LEN)
+    reqs = []
+    for i, t in enumerate(arrivals):
+        tail = rng.integers(0, vocab, size=TAIL_LEN)
+        reqs.append(Request(rid=i, prompt=np.concatenate([prefix, tail]),
+                            max_new=OPEN_MAX_NEW, t_arrival=float(t)))
+    return prefix, reqs
+
+
+def _clone(reqs):
+    from repro.runtime.serve_loop import Request
+    return [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                    t_arrival=r.t_arrival) for r in reqs]
+
+
+def open_loop_cell(trace: str, seed: int = 0, compare: bool = True) -> dict:
+    """Run the slots>=64 open-loop paged cell; ``compare`` also runs the
+    contiguous loop on the same trace and enforces the gates."""
+    from repro.bench import percentiles
+    from repro.runtime.serve_loop import PagedServeLoop, Request, ServeLoop
+
+    cfg, bundle, params = _model("qwen3-4b")
+    rng = np.random.default_rng(seed)
+    if trace == "poisson":
+        arrivals = poisson_arrivals(OPEN_N, 2e-3, rng)
+    elif trace == "bursty":
+        arrivals = bursty_arrivals(OPEN_N, OPEN_SLOTS // 4, 0.1, rng)
+    else:
+        raise ValueError(f"unknown trace {trace!r}")
+    prefix, reqs = _open_trace(cfg.vocab, arrivals, rng)
+    n_pages = 1 + OPEN_SLOTS * S_PHYS // PAGE
+    pool_tokens = (n_pages - 1) * PAGE
+
+    paged = PagedServeLoop(cfg, bundle, params, batch_slots=OPEN_SLOTS,
+                           s_max=S_LOG, chunk=CHUNK, page=PAGE,
+                           n_pages=n_pages)
+    # the warmup request is the system prompt itself: it compiles the
+    # primitives AND registers the shared prefix, so every trace request
+    # adopts it (prefill skips PREFIX_LEN of its PREFIX_LEN+TAIL tokens)
+    paged.run([Request(rid=-1, prompt=prefix, max_new=OPEN_MAX_NEW)])
+    base = paged.stats
+    snap = (base.page_allocs, base.prefix_hits, base.prefix_tokens_reused,
+            base.cow_copies, base.preemptions)
+    t0 = time.perf_counter()
+    res = paged.run(_clone(reqs))
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in res.values())
+    ttft = [paged.stats.ttft[r.rid] for r in reqs]
+    pct = percentiles(ttft, (50.0, 95.0, 99.0))
+    pstats = paged.page_stats()
+    cell = {
+        "requests": len(reqs),
+        "tokens": int(toks),
+        "prefix_hits": base.prefix_hits - snap[1],
+        "prefix_tokens_reused": base.prefix_tokens_reused - snap[2],
+        "page_allocs": base.page_allocs - snap[0],
+        "cow_copies": base.cow_copies - snap[3],
+        "preemptions": base.preemptions - snap[4],
+        "pinned_pages": int(pstats["pages_used"]),
+        "tok_s": toks / dt,
+        "ttft_p50_ms": 1e3 * pct["p50"],
+        "ttft_p95_ms": 1e3 * pct["p95"],
+        "ttft_p99_ms": 1e3 * pct["p99"],
+        "peak_reserved_tokens": int(paged.stats.peak_reserved_tokens),
+        "pool_tokens": pool_tokens,
+        "dt_s": dt,
+    }
+    if not compare:
+        return cell
+
+    contig = ServeLoop(cfg, bundle, params, batch_slots=OPEN_SLOTS,
+                       s_max=S_LOG, chunk=CHUNK)
+    contig.run([Request(rid=-1, prompt=prefix, max_new=OPEN_MAX_NEW)])
+    t0 = time.perf_counter()
+    res_c = contig.run(_clone(reqs))
+    dt_c = time.perf_counter() - t0
+    toks_c = sum(len(v) for v in res_c.values())
+    cell["contig_tok_s"] = toks_c / dt_c
+    cell["speedup"] = cell["tok_s"] / cell["contig_tok_s"]
+    # gates (must fire even under python -O)
+    if res != res_c:
+        raise AssertionError("open-loop paged outputs != contiguous")
+    # static oversubscription witness (timing-independent, unlike the
+    # peak_reserved_tokens sample): every request needs more KV than the
+    # per-slot share of the physical pool, so a contiguous allocator
+    # with the same memory (s_max = S_PHYS) could not admit ANY of them
+    need = PREFIX_LEN + TAIL_LEN + OPEN_MAX_NEW
+    if need <= pool_tokens // OPEN_SLOTS:
+        raise AssertionError(
+            f"trace does not oversubscribe: per-request KV {need} fits "
+            f"the per-slot physical share {pool_tokens // OPEN_SLOTS}")
+    if cell["speedup"] < 1.0:
+        raise AssertionError(
+            f"paged {cell['tok_s']:.1f} tok/s < contiguous "
+            f"{cell['contig_tok_s']:.1f} tok/s")
+    return cell
+
+
+def paged_parity(arch: str, seed: int = 0) -> dict:
+    """Closed-loop paged-vs-contiguous greedy bit-parity for one arch."""
+    from repro.runtime.serve_loop import PagedServeLoop, Request, ServeLoop
+
+    cfg, bundle, params = _model(arch)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, size=n)
+               for n in (12, 3, 25, 7, 1, 18)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new=8)
+                for i, p in enumerate(prompts)]
+
+    contig = ServeLoop(cfg, bundle, params, batch_slots=4, s_max=40,
+                       chunk=CHUNK)
+    r_c = contig.run(reqs())
+    paged = PagedServeLoop(cfg, bundle, params, batch_slots=4, s_max=40,
+                           chunk=CHUNK, page=PAGE)
+    r_p = paged.run(reqs())
+    if r_p != r_c:  # must fire even under python -O
+        raise AssertionError(f"{arch}: paged {r_p} != contiguous {r_c}")
+    fallback = not paged.paged
+    expected_fallback = bundle.cache_init_paged is None
+    if fallback != expected_fallback:
+        raise AssertionError(f"{arch}: fallback={fallback} but bundle "
+                             f"paged primitives absent={expected_fallback}")
+    return {"requests": len(prompts),
+            "tokens": int(sum(len(v) for v in r_c.values())),
+            "match": 1, "fallback": int(fallback),
+            "page_allocs": paged.stats.page_allocs}
+
+
+def prefix_reuse_cell(seed: int = 0) -> dict:
+    """Same prompt twice: identical outputs, strictly fewer allocations
+    the second time (prefix adoption)."""
+    from repro.runtime.serve_loop import PagedServeLoop, Request
+
+    cfg, bundle, params = _model("qwen3-4b")
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab, size=3 * PAGE + 2)
+    loop = PagedServeLoop(cfg, bundle, params, batch_slots=2, s_max=64,
+                          chunk=CHUNK, page=PAGE)
+    cold = loop.run([Request(rid=0, prompt=prompt, max_new=8)])
+    allocs_cold = loop.stats.page_allocs
+    warmr = loop.run([Request(rid=1, prompt=prompt, max_new=8)])
+    allocs_warm = loop.stats.page_allocs - allocs_cold
+    if cold[0] != warmr[1]:  # must fire even under python -O
+        raise AssertionError("prefix-reuse outputs diverge")
+    if allocs_warm >= allocs_cold:
+        raise AssertionError(
+            f"prefix reuse saved nothing: {allocs_warm} >= {allocs_cold}")
+    return {"allocs_cold": allocs_cold, "allocs_warm": allocs_warm,
+            "prefix_hits": loop.stats.prefix_hits,
+            "prefix_tokens_reused": loop.stats.prefix_tokens_reused,
+            "match": 1}
+
+
+# ---------------------------------------------------------------------------
+# Matrix axis
+# ---------------------------------------------------------------------------
+
+_FLOAT_KEYS = ("tok_s", "contig_tok_s", "speedup", "ttft_p50_ms",
+               "ttft_p95_ms", "ttft_p99_ms", "dt_s",
+               # a wall-clock *sample* of concurrency, not structural:
+               # how many arrivals overlap depends on machine speed
+               "peak_reserved_tokens")
+
+
+def _derived(cell: dict) -> dict:
+    """Ints exact-diff; floats informational (see module docstring)."""
+    out = {}
+    for key, val in cell.items():
+        out[key] = round(float(val), 3) if key in _FLOAT_KEYS else int(val)
+    return out
+
+
+def cells(ctx) -> List:
+    """The ``serve`` axis of the benchmark matrix."""
+    from repro.bench import Cell, CellResult, coords
+
+    out: List = []
+
+    def open_cell(trace, compare):
+        def run(c) -> CellResult:
+            t0 = time.perf_counter()
+            cell = open_loop_cell(trace, seed=c.seed, compare=compare)
+            us = (time.perf_counter() - t0) * 1e6
+            return CellResult(us_warm=us, derived=_derived(cell))
+        return run
+
+    for trace, compare in (("poisson", True), ("bursty", False)):
+        out.append(Cell(
+            axis="serve", name=f"serve/open/{trace}/paged/s{OPEN_SLOTS}",
+            coords=coords(f"serve-open-{trace}", "serve", engine="event",
+                          backend="xla", tenants=OPEN_SLOTS),
+            run=open_cell(trace, compare), group="serve-open"))
+
+    def parity_run(arch):
+        def run(c) -> CellResult:
+            return CellResult(derived=_derived(paged_parity(arch,
+                                                            seed=c.seed)))
+        return run
+
+    for arch in PARITY_ARCHS:
+        out.append(Cell(
+            axis="serve", name=f"serve/parity/{arch}/paged-vs-contig",
+            coords=coords(f"serve-parity-{arch}", "serve", backend="xla",
+                          tenants=4),
+            run=parity_run(arch), group="serve-parity"))
+
+    def prefix_run(c) -> CellResult:
+        return CellResult(derived=_derived(prefix_reuse_cell(seed=c.seed)))
+
+    out.append(Cell(
+        axis="serve", name="serve/prefix/qwen3-4b/reuse",
+        coords=coords("serve-prefix", "serve", backend="xla", tenants=2),
+        run=prefix_run, group="serve-prefix"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI sweep
+# ---------------------------------------------------------------------------
+
+
 def run(csv_print, smoke: bool = False) -> dict:
-    import jax
-
-    from repro.configs import get_config
-    from repro.models.registry import build_model
-
     archs = SMOKE_ARCHS if smoke else ARCHS
     slots_sweep = SMOKE_SLOTS if smoke else SLOTS
     mixes = SMOKE_MIXES if smoke else tuple(MIXES)
@@ -136,9 +419,7 @@ def run(csv_print, smoke: bool = False) -> dict:
 
     results = {}
     for arch in archs:
-        cfg = get_config(arch, smoke=True)
-        bundle = build_model(cfg)
-        params = bundle.init(jax.random.PRNGKey(0))
+        cfg, bundle, params = _model(arch)
         _parity_cell(cfg, bundle, params, s_max)
         for mix in mixes:
             for slots in slots_sweep:
@@ -157,4 +438,19 @@ def run(csv_print, smoke: bool = False) -> dict:
                     raise AssertionError(
                         f"{arch} mixed/s8: decoupled speedup "
                         f"{cell['speedup']:.2f}x < {GATE_SPEEDUP}x gate")
+    # paged open-loop cells (the ROADMAP's slots>=64 serving regime)
+    for trace in ("poisson",) if smoke else ("poisson", "bursty"):
+        cell = open_loop_cell(trace, compare=(trace == "poisson"))
+        results[("paged", trace, OPEN_SLOTS)] = cell
+        extra = (f";vs_contig={cell['speedup']:.2f}x"
+                 if "speedup" in cell else "")
+        csv_print(
+            f"serve/open/{trace}/paged/s{OPEN_SLOTS},"
+            f"{1e6 / cell['tok_s']:.1f},"
+            f"tok_s={cell['tok_s']:.1f};"
+            f"ttft_ms={cell['ttft_p50_ms']:.0f}/{cell['ttft_p95_ms']:.0f}/"
+            f"{cell['ttft_p99_ms']:.0f};"
+            f"hits={cell['prefix_hits']}/{cell['requests']};"
+            f"reserved={cell['peak_reserved_tokens']}"
+            f"/{cell['pool_tokens']}{extra}")
     return results

@@ -3,8 +3,10 @@
 Run: PYTHONPATH=src python examples/serve_decode.py --requests 6 --slots 2
 
 ``--legacy`` runs the coupled pre-rewrite loop instead (one prompt
-token per full-batch step) for an on-machine comparison; see
-docs/serving.md and benchmarks/serve_bench.py.
+token per full-batch step) for an on-machine comparison; ``--paged``
+serves from the paged KV pool (page allocator + prefix reuse) and
+prints its page stats; see docs/serving.md and
+benchmarks/serve_bench.py.
 """
 
 import argparse
@@ -13,10 +15,12 @@ import time
 import jax
 import numpy as np
 
+from repro.bench import percentile
 from repro.configs import get_config
 from repro.core.trace import Tracer
 from repro.models.registry import build_model
-from repro.runtime.serve_loop import LegacyServeLoop, Request, ServeLoop
+from repro.runtime.serve_loop import (LegacyServeLoop, PagedServeLoop,
+                                      Request, ServeLoop)
 
 
 def main() -> None:
@@ -29,6 +33,8 @@ def main() -> None:
                     help="prefill tokens per Access-engine step")
     ap.add_argument("--legacy", action="store_true",
                     help="run the coupled legacy loop instead")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV pool (PagedServeLoop)")
     ns = ap.parse_args()
 
     cfg = get_config(ns.arch, smoke=True)
@@ -47,8 +53,9 @@ def main() -> None:
         results = loop.run(reqs)
     else:
         tracer = Tracer()
-        loop = ServeLoop(cfg, m, params, batch_slots=ns.slots, s_max=128,
-                         chunk=ns.chunk, tracer=tracer)
+        cls = PagedServeLoop if ns.paged else ServeLoop
+        loop = cls(cfg, m, params, batch_slots=ns.slots, s_max=128,
+                   chunk=ns.chunk, tracer=tracer)
         results = loop.run(reqs)
     dt = time.time() - t0
     total_toks = sum(len(v) for v in results.values())
@@ -58,14 +65,20 @@ def main() -> None:
         print(f"  req {rid}: {results[rid]}")
     if not ns.legacy:
         s = loop.stats
-        ttft = sorted(s.ttft.values())
+        p50 = percentile(list(s.ttft.values()), 50)
         print(f"steps: {s.prefill_steps} prefill ({s.prefill_tokens} tok), "
               f"{s.decode_steps} decode ({s.decode_tokens} tok); "
-              f"ttft p50 {1e3 * ttft[len(ttft) // 2]:.0f}ms")
+              f"ttft p50 {1e3 * p50:.0f}ms")
         occ = tracer.summary().channel_occupancy()
         print("channel occupancy (mean/max): "
               + ", ".join(f"{k.split('/')[-1]}={v[0]:.1f}/{v[1]}"
                           for k, v in sorted(occ.items())))
+        if ns.paged:
+            ps = loop.page_stats()
+            print(f"pages: {ps['pages_used']}/{ps['n_pages']} used, "
+                  f"{s.page_allocs} allocs, {s.prefix_hits} prefix hits, "
+                  f"{s.cow_copies} cow, {s.preemptions} preemptions, "
+                  f"fragmentation {ps['fragmentation']:.2f}")
     assert len(results) == ns.requests
 
 

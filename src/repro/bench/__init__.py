@@ -32,14 +32,14 @@ from repro.bench.report import (bench_meta, bench_path, build_report,
                                 cell_csv, load_report, write_report)
 from repro.bench.schema import (SCHEMA_VERSION, SchemaError,
                                 schema_problems, validate_report)
-from repro.bench.timing import Timing, measure
+from repro.bench.timing import Timing, measure, percentile, percentiles
 
 __all__ = [
     "BenchContext", "Cell", "CellResult", "COORD_KEYS", "KINDS",
     "check_cells", "coords",
     "run_axis", "run_cells",
     "SCHEMA_VERSION", "SchemaError", "schema_problems", "validate_report",
-    "Timing", "measure",
+    "Timing", "measure", "percentile", "percentiles",
     "FAIL_KINDS", "Finding", "diff_reports", "parse_allowlist",
     "regressions",
     "bench_meta", "bench_path", "build_report", "cell_csv", "load_report",

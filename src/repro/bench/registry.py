@@ -27,7 +27,7 @@ __all__ = [
 # the axis tuple every cell is keyed by, in canonical order
 COORD_KEYS: Tuple[str, ...] = (
     "workload", "kind", "engine", "backend", "tenants", "tuned")
-KINDS: Tuple[str, ...] = ("sim", "kernel", "compiled")
+KINDS: Tuple[str, ...] = ("sim", "kernel", "compiled", "serve")
 
 
 @dataclasses.dataclass(frozen=True)

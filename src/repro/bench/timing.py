@@ -24,9 +24,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Callable, Dict, Sequence
 
-__all__ = ["Timing", "measure"]
+__all__ = ["Timing", "measure", "percentile", "percentiles"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +35,38 @@ class Timing:
 
     us_cold: float
     us_warm: float
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy's default method), shared
+    by the serve bench and its matrix cells.
+
+    The naive ``sorted(v)[int(q/100 * len(v))]`` index the serve bench
+    used to compute is biased: for n < 20 a "p95" lands on the max (or
+    past it, saved only by a min()), and it jumps discontinuously with
+    n.  Interpolating between the two straddling order statistics is
+    exact for the quantile definition diffable across runs.
+    """
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100], got {q}")
+    if not values:
+        raise ValueError("percentile of an empty sequence")
+    xs = sorted(float(v) for v in values)
+    if len(xs) == 1:
+        return xs[0]
+    rank = q / 100.0 * (len(xs) - 1)
+    lo = int(rank)
+    frac = rank - lo
+    if lo + 1 >= len(xs):
+        return xs[-1]
+    return xs[lo] + (xs[lo + 1] - xs[lo]) * frac
+
+
+def percentiles(values: Sequence[float],
+                qs: Sequence[float] = (50.0, 95.0, 99.0)
+                ) -> Dict[str, float]:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` via :func:`percentile`."""
+    return {f"p{q:g}": percentile(values, q) for q in qs}
 
 
 def measure(fn: Callable[[], object], *, warm_reps: int = 3) -> Timing:

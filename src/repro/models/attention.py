@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.models.common import (ModelConfig, dense_init, rmsnorm,
                                  rmsnorm_init, rope)
-from repro.kernels.flash_attention.ops import flash_attention, flash_decode
+from repro.kernels.flash_attention.ops import (flash_attention, flash_decode,
+                                               flash_decode_paged)
 from repro.kernels.flash_attention.ref import (attention_banded,
                                                attention_chunked,
                                                attention_ref,
@@ -95,11 +96,14 @@ def _project_qkv(cfg: ModelConfig, p, x, positions):
 def gqa_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
               window: Optional[int] = None,
               cache: Optional[Dict[str, Any]] = None,
-              valid: Optional[jnp.ndarray] = None
+              valid: Optional[jnp.ndarray] = None,
+              page_table: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
     """Prefill path when cache is None; decode path updates the cache.
 
     cache = {"k": (B,KVH,Smax,hd), "v": ..., "len": (B,) int32}
+      or the paged layout
+    cache = {"kp": (NP,KVH,PAGE,hd), "vp": ..., "len": (B,) int32}
 
     With a cache and S > 1 (or an explicit ``valid`` (B, S) mask) this is
     the *chunked cache-fill* path: the S new tokens of each batch row are
@@ -107,6 +111,16 @@ def gqa_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
     the prefix through position len+i, and rows whose ``valid`` count is
     0 leave both cache and length untouched — the serving loop's Access
     (prefill-chunk) and Execute (masked decode) engines both land here.
+
+    The paged layout stores KV in a shared pool of fixed-size pages;
+    ``page_table`` (B, NPB) int32 maps each row's logical block i to a
+    pool page.  Invalid-token scatters are routed to the reserved trash
+    page 0 (see runtime.serve_loop.PageAllocator).  In ``pallas`` mode a
+    single-token step drives ``flash_decode_paged``'s ring gather over
+    the scalar-prefetched table; the ref path gathers the table back to
+    a contiguous (B, KVH, NPB*PAGE, hd) view and reuses the exact
+    contiguous oracle, so paged and contiguous decode are bit-identical
+    whenever NPB*PAGE equals the contiguous s_max.
     """
     b, s, d = x.shape
     q, k, v = _project_qkv(cfg, p, x, positions)
@@ -114,6 +128,25 @@ def gqa_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
     if cache is None:
         out = _prefill_attention(cfg, q, k, v, causal=causal, window=window)
         new_cache = None
+    elif "kp" in cache:
+        if page_table is None:
+            raise ValueError("paged KV cache requires a page_table")
+        pos = cache["len"]                                     # (B,)
+        if valid is None:
+            valid = jnp.ones((b, s), bool)
+        kp = _scatter_chunk_pages(cache["kp"], k, pos, valid, page_table)
+        vp = _scatter_chunk_pages(cache["vp"], v, pos, valid, page_table)
+        lens = pos + valid.sum(-1).astype(pos.dtype)
+        qlens = pos[:, None] + jnp.arange(1, s + 1, dtype=pos.dtype)[None]
+        if s == 1 and cfg.kernel_mode == "pallas":
+            out = flash_decode_paged(q[:, :, 0, :], kp, vp, page_table,
+                                     qlens[:, 0])
+            out = out[:, :, None, :]
+        else:
+            kc = _gather_pages(kp, page_table)
+            vc = _gather_pages(vp, page_table)
+            out = decode_chunk_ref(q, kc, vc, qlens)           # (B,H,S,hd)
+        new_cache = {"kp": kp, "vp": vp, "len": lens}
     elif s == 1 and valid is None:
         pos = cache["len"]                                     # (B,)
         # scatter the new K/V at each batch row's position
@@ -176,6 +209,62 @@ def _scatter_chunk(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray,
     upd = jnp.einsum("bcs,bkcd->bksd", oh, new.astype(cache.dtype))
     keep = (1 - oh.sum(1))[:, None, :, None]                   # (B,1,Smax,1)
     return cache * keep + upd
+
+
+# paged KV helpers ------------------------------------------------------------
+
+
+def _page_targets(page: int, npb: int, pos, valid):
+    """(page id is resolved by the caller) logical block + offset of each
+    of the C new tokens per row; invalid tokens are rerouted to block 0
+    (the allocator's reserved trash page)."""
+    c = valid.shape[1]
+    tgt = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None, :]   # (B, C)
+    blk = jnp.clip(tgt // page, 0, npb - 1)
+    return blk, tgt % page
+
+
+def _scatter_chunk_pages(pages: jnp.ndarray, new: jnp.ndarray,
+                         pos: jnp.ndarray, valid: jnp.ndarray,
+                         page_table: jnp.ndarray) -> jnp.ndarray:
+    """pages (NP, KVH, PAGE, hd); new (B, KVH, C, hd); pos (B,);
+    valid (B, C); page_table (B, NPB) int32.  Valid token i of row b
+    lands at offset (pos_b + i) % PAGE of page
+    table[b, (pos_b + i) // PAGE]; invalid tokens land in page 0, whose
+    contents are never attended (lengths mask them)."""
+    page = pages.shape[2]
+    kvh, hd = pages.shape[1], pages.shape[3]
+    blk, off = _page_targets(page, page_table.shape[1], pos, valid)
+    pg = jnp.where(valid, jnp.take_along_axis(page_table, blk, axis=1), 0)
+    vals = new.transpose(0, 2, 1, 3).reshape(-1, kvh, hd)      # (B*C, KVH, hd)
+    return pages.at[pg.reshape(-1), :, off.reshape(-1), :].set(
+        vals.astype(pages.dtype))
+
+
+def _scatter_vec_pages(pages: jnp.ndarray, new: jnp.ndarray,
+                       pos: jnp.ndarray, valid: jnp.ndarray,
+                       page_table: jnp.ndarray) -> jnp.ndarray:
+    """pages (NP, PAGE, D); new (B, C, D) — the MLA latent variant."""
+    page = pages.shape[1]
+    blk, off = _page_targets(page, page_table.shape[1], pos, valid)
+    pg = jnp.where(valid, jnp.take_along_axis(page_table, blk, axis=1), 0)
+    return pages.at[pg.reshape(-1), off.reshape(-1), :].set(
+        new.reshape(-1, new.shape[-1]).astype(pages.dtype))
+
+
+def _gather_pages(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(NP, KVH, PAGE, hd), (B, NPB) -> contiguous (B, KVH, NPB*PAGE, hd)."""
+    g = jnp.take(pages, page_table, axis=0)        # (B, NPB, KVH, PAGE, hd)
+    b, npb, kvh, page, hd = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, kvh, npb * page, hd)
+
+
+def _gather_vec_pages(pages: jnp.ndarray, page_table: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """(NP, PAGE, D), (B, NPB) -> contiguous (B, NPB*PAGE, D)."""
+    g = jnp.take(pages, page_table, axis=0)        # (B, NPB, PAGE, D)
+    b, npb, page, d = g.shape
+    return g.reshape(b, npb * page, d)
 
 
 # cross attention (enc-dec) ---------------------------------------------------
@@ -264,9 +353,16 @@ def _mla_q(cfg, p, x):
 
 def mla_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
               cache: Optional[Dict[str, Any]] = None,
-              valid: Optional[jnp.ndarray] = None):
+              valid: Optional[jnp.ndarray] = None,
+              page_table: Optional[jnp.ndarray] = None):
     """MLA attention.  cache = {"ckv": (B,Smax,r), "kr": (B,Smax,dr),
-    "len": (B,)} — the compressed-latent cache (the MLA memory win).
+    "len": (B,)} — the compressed-latent cache (the MLA memory win) —
+    or the paged layout {"ckvp": (NP,PAGE,r), "krp": (NP,PAGE,dr),
+    "len": (B,)} with a ``page_table`` (B, NPB): MLA pages the *latents*
+    (the decoupled fetch reads r + dr bytes per token from the pool),
+    gathers them contiguous, and up-projects exactly as the contiguous
+    path does, so paged decode is bit-identical in both kernel modes
+    whenever NPB*PAGE equals the contiguous s_max.
     S > 1 (or an explicit ``valid`` mask) with a cache is the chunked
     cache-fill path; see :func:`gqa_apply`."""
     b, s, d = x.shape
@@ -283,8 +379,24 @@ def mla_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
     kr = rope((x @ p["w_kr"].astype(dt))[:, None, :, :],
               positions[:, None, :], cfg.rope_theta)            # (B,1,S,dr)
 
+    paged = cache is not None and "ckvp" in cache
     chunked = cache is not None and not (s == 1 and valid is None)
-    if cache is not None and not chunked:
+    if paged:
+        if page_table is None:
+            raise ValueError("paged MLA cache requires a page_table")
+        pos = cache["len"]
+        if valid is None:
+            valid = jnp.ones((b, s), bool)
+        ckv_p = _scatter_vec_pages(cache["ckvp"], ckv, pos, valid, page_table)
+        kr_p = _scatter_vec_pages(cache["krp"], kr[:, 0], pos, valid,
+                                  page_table)
+        lens = pos + valid.sum(-1).astype(pos.dtype)
+        ckv_full = _gather_vec_pages(ckv_p, page_table)         # (B,Slog,r)
+        kr_full = _gather_vec_pages(kr_p, page_table)[:, None]  # (B,1,Slog,dr)
+        new_cache = {"ckvp": ckv_p, "krp": kr_p, "len": lens}
+        s_kv = ckv_full.shape[1]
+        chunked = True      # paged decode always takes the masked-chunk path
+    elif cache is not None and not chunked:
         pos = cache["len"]
         ckv_c = _scatter_vec(cache["ckv"], ckv, pos)            # (B,Smax,r)
         kr_c = _scatter_vec(cache["kr"], kr[:, 0], pos)         # (B,Smax,dr)

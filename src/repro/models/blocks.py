@@ -25,12 +25,12 @@ def _attn_init(cfg: ModelConfig, key):
 
 
 def _attn_apply(cfg, p, x, positions, *, causal=True, window=None, cache=None,
-                valid=None):
+                valid=None, page_table=None):
     if cfg.attn_kind == "mla":
         return attn.mla_apply(cfg, p, x, positions, causal=causal, cache=cache,
-                              valid=valid)
+                              valid=valid, page_table=page_table)
     return attn.gqa_apply(cfg, p, x, positions, causal=causal, window=window,
-                          cache=cache, valid=valid)
+                          cache=cache, valid=valid, page_table=page_table)
 
 
 def block_init(cfg: ModelConfig, kind: str, key) -> Dict[str, Any]:
@@ -75,11 +75,14 @@ def block_init(cfg: ModelConfig, kind: str, key) -> Dict[str, Any]:
 def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *,
                 cache: Optional[Dict[str, Any]] = None,
                 enc_kv=None,
-                valid: Optional[jnp.ndarray] = None
+                valid: Optional[jnp.ndarray] = None,
+                page_table: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
     """``valid`` (B, S) marks which of the S tokens are real per batch
     row (chunked cache fill / masked decode); ``None`` means all are —
-    the pre-existing train and single-token decode paths."""
+    the pre-existing train and single-token decode paths.  A paged
+    attention cache (from :func:`block_cache_init_paged`) additionally
+    needs the slot->page ``page_table`` (B, NPB)."""
     eps = cfg.norm_eps
     new_cache: Optional[Dict[str, Any]] = None
 
@@ -89,7 +92,7 @@ def block_apply(cfg: ModelConfig, kind: str, p, x, positions, *,
         h, ac = _attn_apply(cfg, p["attn"], rmsnorm(x, p["ln1"], eps),
                             positions, causal=causal, window=window,
                             cache=None if cache is None else cache["attn"],
-                            valid=valid)
+                            valid=valid, page_table=page_table)
         x = x + h
         if kind == "moe":
             # decode: dropless dispatch (capacity drops would make decode
@@ -174,3 +177,28 @@ def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_max: int
         from repro.models.rwkv import rwkv_state_init
         return rwkv_state_init(cfg, batch)
     raise ValueError(kind)
+
+
+def block_cache_init_paged(cfg: ModelConfig, kind: str, batch: int,
+                           n_pages: int, page: int) -> Dict[str, Any]:
+    """Paged decode-cache pytree for one layer of ``kind``.
+
+    KV lives in a shared physical pool of ``n_pages`` fixed-size pages;
+    each slot addresses its logical sequence through a page table
+    (passed separately at apply time).  Page 0 is reserved as the trash
+    page — unmapped table entries point there and its contents are never
+    attended to because ``len`` masks them.  Only pure-attention kinds
+    page; recurrent state (ssm/rwkv/hymba) has no growing KV to page.
+    """
+    hd, kvh = cfg.hd, cfg.n_kv_heads
+    if kind not in ("attn", "moe"):
+        raise ValueError(f"block kind {kind!r} has no paged cache")
+    if cfg.attn_kind == "mla":
+        ac = {"ckvp": jnp.zeros((n_pages, page, cfg.kv_lora_rank), cfg.adtype),
+              "krp": jnp.zeros((n_pages, page, cfg.qk_rope_dim), cfg.adtype),
+              "len": jnp.zeros((batch,), jnp.int32)}
+    else:
+        ac = {"kp": jnp.zeros((n_pages, kvh, page, hd), cfg.adtype),
+              "vp": jnp.zeros((n_pages, kvh, page, hd), cfg.adtype),
+              "len": jnp.zeros((batch,), jnp.int32)}
+    return {"attn": ac}

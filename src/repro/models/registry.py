@@ -7,7 +7,14 @@
   cache_init(batch, s_max), decode_step(params, cache, token, pos)
   prefill(params, cache, tokens, pos, n_valid)       (chunked cache fill)
   cache_reset(cache, keep_mask)                      (slot recycling)
-plus ``input_specs(cfg, shape)`` lives in repro.launch.specs.
+plus, for pure-attention decoder families (layer kinds ⊆ {attn, moe}):
+  cache_init_paged(batch, n_pages, page)             (pooled KV pages)
+  prefill_paged(params, cache, tok, pos, n_valid, page_table)
+  copy_pages(cache, src, dst)                        (COW primitive)
+  cache_reset_paged(cache, keep_mask, new_lens)      (page recycling)
+These four are ``None`` for recurrent-state families (ssm, hybrid,
+encdec) — the serve loop falls back to the contiguous path there.
+``input_specs(cfg, shape)`` lives in repro.launch.specs.
 
 ``prefill`` is the serving hot-path primitive (see runtime.serve_loop):
 one call advances every batch row by up to C prompt tokens through the
@@ -41,6 +48,12 @@ class ModelBundle:
     prefill: Optional[Callable] = None
     cache_reset: Optional[Callable] = None
     encode: Optional[Callable] = None
+    # paged-KV serving (None for families with recurrent state — the
+    # serve loop falls back to the contiguous path, bit-parity-pinned)
+    cache_init_paged: Optional[Callable] = None
+    prefill_paged: Optional[Callable] = None
+    copy_pages: Optional[Callable] = None
+    cache_reset_paged: Optional[Callable] = None
 
 
 def cache_reset(cache: Any, keep: jnp.ndarray) -> Any:
@@ -75,6 +88,8 @@ def build_model(cfg: ModelConfig) -> ModelBundle:
             cache_reset=cache_reset,
         )
     # decoder-only families (dense, moe, ssm, hybrid, vlm)
+    kinds = {spec.kind for spec in cfg.layer_specs()}
+    paged = kinds <= {"attn", "moe"}   # recurrent state cannot page
     return ModelBundle(
         cfg=cfg,
         init=lambda key: _t.lm_init(cfg, key),
@@ -86,4 +101,15 @@ def build_model(cfg: ModelConfig) -> ModelBundle:
         prefill=lambda p, cache, tok, pos, n_valid:
             _t.lm_prefill(cfg, p, cache, tok, pos, n_valid),
         cache_reset=cache_reset,
+        cache_init_paged=(
+            (lambda b, n_pages, page:
+             _t.lm_cache_init_paged(cfg, b, n_pages, page))
+            if paged else None),
+        prefill_paged=(
+            (lambda p, cache, tok, pos, n_valid, page_table:
+             _t.lm_prefill(cfg, p, cache, tok, pos, n_valid,
+                           page_table=page_table))
+            if paged else None),
+        copy_pages=_t.lm_copy_pages if paged else None,
+        cache_reset_paged=_t.lm_paged_reset if paged else None,
     )

@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dae_gather.ops import dae_gather
-from repro.models.blocks import block_apply, block_cache_init, block_init
+from repro.models.blocks import (block_apply, block_cache_init,
+                                 block_cache_init_paged, block_init)
 from repro.models.common import (ModelConfig, cross_entropy_loss, dense_init,
                                  rmsnorm, rmsnorm_init)
 
@@ -130,6 +131,58 @@ def lm_cache_init(cfg: ModelConfig, batch: int, s_max: int) -> List[Any]:
     return caches
 
 
+def lm_cache_init_paged(cfg: ModelConfig, batch: int, n_pages: int,
+                        page: int) -> List[Any]:
+    """Paged decode caches: KV pages are pooled across all ``batch``
+    slots; each layer of a segment gets its own pool (leaf shape
+    ``(count, n_pages, ...)``) addressed by one shared page table."""
+    caches = []
+    for spec in cfg.layer_specs():
+        one = block_cache_init_paged(cfg, spec.kind, batch, n_pages, page)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (spec.count,) + a.shape), one))
+    return caches
+
+
+_PAGE_KEYS = ("kp", "vp", "ckvp", "krp")
+
+
+def lm_copy_pages(caches: List[Any], src: jnp.ndarray, dst: jnp.ndarray
+                  ) -> List[Any]:
+    """Copy physical page ``src`` into page ``dst`` in every layer —
+    the allocator's copy-on-write primitive.  src/dst are int32 scalars
+    (traced, so one jit covers every page pair)."""
+    out = []
+    for cache in caches:
+        new = dict(cache)
+        attn = dict(cache["attn"])
+        for key in _PAGE_KEYS:
+            if key in attn:
+                a = attn[key]
+                attn[key] = a.at[:, dst].set(a[:, src])
+        new["attn"] = attn
+        out.append(new)
+    return out
+
+
+def lm_paged_reset(caches: List[Any], keep: jnp.ndarray,
+                   new_lens: jnp.ndarray) -> List[Any]:
+    """Reset per-slot logical lengths for slots where ``keep`` is False
+    (to ``new_lens``, e.g. a reused prefix length).  Page contents are
+    untouched: positions < len are always freshly written by prefill
+    and positions >= len are masked out of attention."""
+    out = []
+    for cache in caches:
+        new = dict(cache)
+        attn = dict(cache["attn"])
+        ln = attn["len"]
+        attn["len"] = jnp.where(keep[None, :], ln,
+                                new_lens[None, :].astype(ln.dtype))
+        new["attn"] = attn
+        out.append(new)
+    return out
+
+
 def lm_decode_step(cfg: ModelConfig, params: Params, caches: List[Any],
                    token: jnp.ndarray, pos: jnp.ndarray
                    ) -> Tuple[jnp.ndarray, List[Any]]:
@@ -164,7 +217,8 @@ def lm_decode_step(cfg: ModelConfig, params: Params, caches: List[Any],
 
 
 def lm_prefill(cfg: ModelConfig, params: Params, caches: List[Any],
-               tokens: jnp.ndarray, pos: jnp.ndarray, n_valid: jnp.ndarray
+               tokens: jnp.ndarray, pos: jnp.ndarray, n_valid: jnp.ndarray,
+               page_table: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, List[Any]]:
     """Chunked, batched, teacher-forced cache fill — the serving Access
     engine's step (paper §3: the decoupled access stream).
@@ -190,7 +244,8 @@ def lm_prefill(cfg: ModelConfig, params: Params, caches: List[Any],
         def body(h, pc):
             layer_params, layer_cache = pc
             h2, nc = block_apply(cfg, spec.kind, layer_params, h, positions,
-                                 cache=layer_cache, valid=valid)
+                                 cache=layer_cache, valid=valid,
+                                 page_table=page_table)
             return h2, nc
 
         if not cfg.scan_layers:
