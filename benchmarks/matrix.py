@@ -129,5 +129,5 @@ def run_matrix(csv_print: Callable[[str], None], smoke: bool = False,
     return reports
 
 
-def run(csv_print, smoke: bool = False) -> None:
-    run_matrix(csv_print, smoke)
+def run(csv_print, smoke: bool = False, axes: tuple = AXES) -> None:
+    run_matrix(csv_print, smoke, axes=axes)

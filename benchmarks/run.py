@@ -31,7 +31,8 @@
                       compile/serve axes and writes one schema-validated
                       BENCH_<axis>.json per axis at the repo root;
                       gate a run against the committed baseline with
-                      `python -m benchmarks.diff` (--smoke for CI scale)
+                      `python -m benchmarks.diff` (--smoke for CI scale;
+                      --axes=serve,kernels restricts to those axes)
 
 Run: PYTHONPATH=src python -m benchmarks.run [table1 table3 tune scale ...]
 """
@@ -95,7 +96,18 @@ def main() -> None:
         # explicit-only: the bare run-everything default already covers
         # each table once; matrix would re-run them all a second time
         from benchmarks import matrix
-        matrix.run(_csv, smoke="--smoke" in flags)
+        axes = matrix.AXES
+        for f in flags:
+            # --axes=serve,kernels restricts the matrix to those axes
+            # (e.g. the CI multi-device job re-runs only `serve`)
+            if f.startswith("--axes="):
+                axes = tuple(a for a in f[len("--axes="):].split(",") if a)
+                unknown = set(axes) - set(matrix.AXES)
+                if unknown:
+                    print(f"error: unknown matrix axes {sorted(unknown)}; "
+                          f"valid: {matrix.AXES}", file=sys.stderr)
+                    raise SystemExit(2)
+        matrix.run(_csv, smoke="--smoke" in flags, axes=axes)
 
 
 if __name__ == "__main__":

@@ -39,10 +39,18 @@ which the diff treats as informational.
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
+from pathlib import Path
 from typing import List
 
 import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 MIXES = {
     "short": (6, 6),       # uniform short prompts
@@ -344,6 +352,116 @@ def prefix_reuse_cell(seed: int = 0) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Sharded serving cells (runtime/mesh_serve.py)
+# ---------------------------------------------------------------------------
+
+
+def sharded_mesh1_cell(seed: int = 0) -> dict:
+    """Single-device co-located placement: ShardedPagedServeLoop on
+    mesh(n=1) must be bit-identical to PagedServeLoop — same outputs,
+    same structural counters — with control messages riding the
+    (degenerate, identity-permute) MeshChannel ring."""
+    from repro.launch.mesh import make_serve_meshes
+    from repro.runtime.mesh_serve import ShardedPagedServeLoop
+    from repro.runtime.serve_loop import PagedServeLoop, Request
+
+    cfg, bundle, params = _model("qwen3-4b")
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, size=n)
+               for n in (12, 3, 25, 7, 1, 18)]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new=8)
+                for i, p in enumerate(prompts)]
+
+    base = PagedServeLoop(cfg, bundle, params, batch_slots=4, s_max=40,
+                          chunk=CHUNK, page=PAGE)
+    r0 = base.run(reqs())
+    sharded = ShardedPagedServeLoop(cfg, bundle, params, batch_slots=4,
+                                    s_max=40, meshes=make_serve_meshes(1),
+                                    chunk=CHUNK, page=PAGE)
+    r1 = sharded.run(reqs())
+    if r0 != r1:  # must fire even under python -O
+        raise AssertionError(f"mesh1 sharded != single-host: {r1} vs {r0}")
+    for k in ("prefill_tokens", "decode_tokens", "page_allocs",
+              "cow_copies", "preemptions", "prefix_hits"):
+        if getattr(base.stats, k) != getattr(sharded.stats, k):
+            raise AssertionError(
+                f"mesh1 counter {k}: sharded {getattr(sharded.stats, k)} "
+                f"!= base {getattr(base.stats, k)}")
+    return {"requests": len(prompts),
+            "tokens": int(sum(len(v) for v in r0.values())),
+            "match": 1, "page_allocs": sharded.stats.page_allocs,
+            "migrations": sharded.stats.migrations}
+
+
+# the mesh8 open-loop snippet runs in a subprocess so the cell is
+# reproducible from any parent (normal CI sees 1 device, the
+# multi-device job 8 — the child always forces 8)
+_MESH8_SNIPPET = """
+    import json, time
+    import jax, numpy as np
+    assert jax.device_count() == 8, jax.device_count()
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+    from repro.launch.mesh import make_serve_meshes
+    from repro.runtime.serve_loop import PagedServeLoop, Request
+    from repro.runtime.mesh_serve import ShardedPagedServeLoop
+
+    seed = %d
+    cfg = get_config("qwen3-4b", smoke=True)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    sizes = (12, 3, 25, 7, 1, 18, 9, 30)
+    arrivals = np.cumsum(rng.exponential(2e-3, size=len(sizes)))
+    prompts = [rng.integers(0, cfg.vocab, size=n) for n in sizes]
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new=6, t_arrival=float(t))
+                for i, (p, t) in enumerate(zip(prompts, arrivals))]
+    # ample slots/pool + prefix off: every structural counter below is
+    # arrival-timing independent (no preemption, no prefix adoption)
+    kw = dict(batch_slots=8, s_max=40, chunk=16, page=8,
+              prefix_reuse=False)
+    base = PagedServeLoop(cfg, bundle, params, **kw)
+    r0 = base.run(reqs())
+    meshes = make_serve_meshes(8)
+    assert meshes.disaggregated
+    kw.pop("prefix_reuse")
+    sh = ShardedPagedServeLoop(cfg, bundle, params, meshes=meshes, **kw)
+    t0 = time.perf_counter()
+    r1 = sh.run(reqs())
+    dt = time.perf_counter() - t0
+    assert r0 == r1, "disaggregated open-loop outputs diverge"
+    toks = sum(len(v) for v in r1.values())
+    print(json.dumps({
+        "requests": len(sizes), "tokens": int(toks), "match": 1,
+        "migrations": sh.stats.migrations,
+        "page_allocs": sh.stats.page_allocs,
+        "preemptions": sh.stats.preemptions,
+        "prefix_hits": sh.stats.prefix_hits,
+        "tok_s": toks / dt, "dt_s": dt}))
+"""
+
+
+def sharded_open_mesh8_cell(seed: int = 0) -> dict:
+    """Disaggregated open-loop serving on 8 forced host devices:
+    prefill and decode engines on disjoint 4-device submeshes, joined
+    by mesh channels, with page migration between the pools.  Outputs
+    must match the single-host paged loop on the same arrival trace."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_MESH8_SNIPPET % seed)],
+        capture_output=True, text=True, env=env, timeout=600)
+    if out.returncode != 0:  # must fire even under python -O
+        raise AssertionError(
+            f"mesh8 subprocess failed:\n{out.stderr[-3000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# ---------------------------------------------------------------------------
 # Matrix axis
 # ---------------------------------------------------------------------------
 
@@ -403,6 +521,27 @@ def cells(ctx) -> List:
         axis="serve", name="serve/prefix/qwen3-4b/reuse",
         coords=coords("serve-prefix", "serve", backend="xla", tenants=2),
         run=prefix_run, group="serve-prefix"))
+
+    def mesh1_run(c) -> CellResult:
+        return CellResult(derived=_derived(sharded_mesh1_cell(seed=c.seed)))
+
+    out.append(Cell(
+        axis="serve", name="serve/sharded/mesh1/qwen3-4b/paged",
+        coords=coords("serve-sharded-mesh1", "serve", backend="xla",
+                      tenants=4),
+        run=mesh1_run, group="serve-sharded"))
+
+    def mesh8_run(c) -> CellResult:
+        t0 = time.perf_counter()
+        cell = sharded_open_mesh8_cell(seed=c.seed)
+        us = (time.perf_counter() - t0) * 1e6
+        return CellResult(us_warm=us, derived=_derived(cell))
+
+    out.append(Cell(
+        axis="serve", name="serve/sharded/open/mesh8/qwen3-4b/disagg",
+        coords=coords("serve-sharded-mesh8", "serve", backend="xla",
+                      tenants=8),
+        run=mesh8_run, group="serve-sharded"))
     return out
 
 

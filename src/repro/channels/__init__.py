@@ -1,0 +1,35 @@
+"""One Channel abstraction from the simulator to shard_map.
+
+The repo grew three divergent channel implementations: the simulator's
+``Enq``/``Deq`` FIFO state (``core/simulator.py``), the serve loop's
+traced bounded queue (``runtime/serve_loop.py``), and the VMEM ring
+(``kernels/ring.py``).  This package is the unification seam for the
+host-level two: one protocol (:class:`ChannelBase` — name, capacity,
+push/pop/peek/occupancy, tracer hooks) with pluggable transports:
+
+  * :class:`LocalChannel`  — in-process deque (the serve loop's
+    original channel, bit-identical semantics);
+  * :class:`SimChannel`    — the simulator's timed FIFO (ready-time
+    entries, Req/Resp/Enq/Deq conservation counters);
+  * :class:`MeshChannel`   — a ``shard_map`` ring over a named mesh
+    axis using ``jax.lax.ppermute`` (collective_permute): payloads
+    physically travel from a source to a destination device.
+
+All transports report occupancy through the same
+:class:`repro.core.trace.Tracer` vocabulary (see ``base.py``), so a
+serve trace, a DAE program trace, and a sharded-pipeline trace read
+identically.  The device-kernel ring (``kernels/ring.py``) stays
+separate: it lives in VMEM inside a Pallas grid, below the host
+protocol boundary.
+
+Migration note: ``runtime.serve_loop.Channel`` is now an alias of
+:class:`LocalChannel`; import channels from ``repro.channels`` — see
+docs/serving.md.
+"""
+
+from repro.channels.base import ChannelBase
+from repro.channels.local import LocalChannel
+from repro.channels.sim import SimChannel
+from repro.channels.mesh import MeshChannel
+
+__all__ = ["ChannelBase", "LocalChannel", "SimChannel", "MeshChannel"]

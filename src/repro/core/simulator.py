@@ -88,6 +88,7 @@ from repro.core.dae import (
     StoreWait,
     StreamChannel,
 )
+from repro.channels.sim import SimChannel
 
 __all__ = [
     "ENGINES",
@@ -294,19 +295,13 @@ class SimResult:
         return [s.get(i) for i in range(n)]
 
 
-class _ChanState:
-    __slots__ = ("fifo", "reqs", "resps", "enqs", "deqs",
-                 "push_key", "pop_key")
-
-    def __init__(self) -> None:
-        self.fifo: "deque[Tuple[float, Any]]" = deque()  # (ready_time, value)
-        self.reqs = 0
-        self.resps = 0
-        self.enqs = 0
-        self.deqs = 0
-        # event-engine wake keys, filled lazily by _chan_ev
-        self.push_key: Optional[Tuple] = None
-        self.pop_key: Optional[Tuple] = None
+# Channel state is the sim transport of the shared repro.channels
+# protocol: a timed (ready_time, value) FIFO with the §5.1 conservation
+# counters and the event engine's wake keys.  Both engines mutate it
+# only through push_timed/pop_timed, which emit the shared occupancy
+# vocabulary; the readiness oracles below still peek ``st.fifo``
+# directly (scheduler hot path).
+_ChanState = SimChannel
 
 
 class _Proc:
@@ -509,38 +504,25 @@ def _execute(ctx: _Ctx, inst: _Inst, eff: Any, t: float) -> Any:
         t_issue = max(t, ctx.port_next_issue.get(key, 0.0))
         t_done, value = mem.access(eff.addr, t_issue)
         ctx.port_next_issue[key] = t_issue + 1.0
-        st.fifo.append((t_done, value))
-        st.reqs += 1
         inst.port_reads[c.port] = inst.port_reads.get(c.port, 0) + 1
         if ctx.trace is not None:
             ctx.trace.on_request(inst.name, c.name,
                                  _port_label(owner, c.port), t_issue, t_done)
-            ctx.trace.on_occupancy(inst.name, c.name, len(st.fifo), t)
+        st.push_timed(t_done, value, "req", ctx.trace, inst.name, c.name, t)
         return None
     if isinstance(eff, Resp):
         st = inst.chan(eff.channel)
-        _, value = st.fifo.popleft()
-        st.resps += 1
-        if ctx.trace is not None:
-            ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo), t)
-        return value
+        return st.pop_timed("resp", ctx.trace, inst.name,
+                            eff.channel.name, t)
     if isinstance(eff, Enq):
         st = inst.chan(eff.channel)
-        st.fifo.append((t + 1.0, eff.value))
-        st.enqs += 1
-        if ctx.trace is not None:
-            ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo), t)
+        st.push_timed(t + 1.0, eff.value, "enq", ctx.trace, inst.name,
+                      eff.channel.name, t)
         return None
     if isinstance(eff, Deq):
         st = inst.chan(eff.channel)
-        _, value = st.fifo.popleft()
-        st.deqs += 1
-        if ctx.trace is not None:
-            ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo), t)
-        return value
+        return st.pop_timed("deq", ctx.trace, inst.name,
+                            eff.channel.name, t)
     if isinstance(eff, Store):
         port = eff.port
         mem, owner = ctx.mem(inst, port)
@@ -718,13 +700,9 @@ def _exec_ev(ctx: _Ctx, inst: _Inst, eff: Any, t: float,
         return value
     if cls is Resp:
         st = _chan_ev(inst, eff.channel)
-        _, value = st.fifo.popleft()
-        st.resps += 1
         ev.append(st.pop_key)
-        if ctx.trace is not None:
-            ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo), t)
-        return value
+        return st.pop_timed("resp", ctx.trace, inst.name,
+                            eff.channel.name, t)
     if cls is Req:
         c = eff.channel
         st = _chan_ev(inst, c)
@@ -736,36 +714,28 @@ def _exec_ev(ctx: _Ctx, inst: _Inst, eff: Any, t: float,
             t_issue = t
         t_done, value = mem.access(eff.addr, t_issue)
         pni[pni_key] = t_issue + 1.0
-        st.fifo.append((t_done, value))
-        st.reqs += 1
         inst.port_reads[c.port] = inst.port_reads.get(c.port, 0) + 1
         ev.append(st.push_key)
         ev.append(issue_key)
         ev.append(mem_key)
         if ctx.trace is not None:
             ctx.trace.on_request(inst.name, c.name, label, t_issue, t_done)
-            ctx.trace.on_occupancy(inst.name, c.name, len(st.fifo), t)
+        st.push_timed(t_done, value, "req", ctx.trace, inst.name, c.name, t)
         return None
     if cls is Par:
         return tuple([_exec_ev(ctx, inst, sub, t, ev)
                       for sub in eff.effects])
     if cls is Enq:
         st = _chan_ev(inst, eff.channel)
-        st.fifo.append((t + 1.0, eff.value))
-        st.enqs += 1
         ev.append(st.push_key)
-        if ctx.trace is not None:
-            ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo), t)
+        st.push_timed(t + 1.0, eff.value, "enq", ctx.trace, inst.name,
+                      eff.channel.name, t)
         return None
     if cls is Deq:
         st = _chan_ev(inst, eff.channel)
-        _, value = st.fifo.popleft()
-        st.deqs += 1
         ev.append(st.pop_key)
-        if ctx.trace is not None:
-            ctx.trace.on_occupancy(inst.name, eff.channel.name,
-                                   len(st.fifo), t)
+        value = st.pop_timed("deq", ctx.trace, inst.name,
+                             eff.channel.name, t)
         return value
     if cls is Store:
         port = eff.port

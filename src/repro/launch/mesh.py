@@ -7,6 +7,9 @@ XLA_FLAGS *before* any jax import (see dryrun.py).
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional
+
 import jax
 import numpy as np
 from jax.sharding import Mesh
@@ -29,5 +32,67 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_debug_mesh(shape=(2, 4), axes=("data", "model")) -> Mesh:
     """Small mesh for unit tests (e.g. 8 forced host devices)."""
     n = int(np.prod(shape))
-    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
-    return Mesh(dev_array, axes)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before importing jax")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeMeshes:
+    """Device placement of the sharded serving pipeline.
+
+    ``prefill``/``decode`` are the Access and Execute engines' compute
+    meshes; ``union`` covers both and carries the cross-engine
+    :class:`~repro.channels.mesh.MeshChannel` ring.  When
+    ``disaggregated`` the two engine meshes are *disjoint* submeshes
+    (the union gains a leading ``role`` axis of size 2: row 0 prefill,
+    row 1 decode) and the engines are joined only by mesh-transport
+    channels; otherwise all three are the same mesh and the channels
+    ride its ``data`` axis.
+    """
+
+    union: Mesh
+    prefill: Mesh
+    decode: Mesh
+    disaggregated: bool
+    axis: str = "data"
+    role_axis: str = "role"
+
+
+def make_serve_meshes(n: Optional[int] = None, *,
+                      disaggregate: Optional[bool] = None) -> ServeMeshes:
+    """Carve the first ``n`` devices into serving meshes.
+
+    ``disaggregate`` defaults to splitting whenever an even n >= 2 is
+    available; ``n`` defaults to every visible device.  n=1 always
+    degenerates to one single-device mesh shared by both engines (the
+    bit-parity configuration the serve matrix pins).
+    """
+    devices = jax.devices()
+    if n is None:
+        n = len(devices)
+    if n < 1:
+        raise ValueError(f"need n >= 1 serving devices, got {n}")
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for serving meshes, have {len(devices)}; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before importing jax")
+    if disaggregate is None:
+        disaggregate = n >= 2 and n % 2 == 0
+    if disaggregate and (n < 2 or n % 2):
+        raise ValueError(
+            f"disaggregated serving splits devices in half, got n={n}")
+    devs = np.asarray(devices[:n])
+    if not disaggregate:
+        mesh = Mesh(devs, ("data",))
+        return ServeMeshes(mesh, mesh, mesh, False)
+    half = n // 2
+    union = Mesh(devs.reshape(2, half), ("role", "data"))
+    prefill = Mesh(devs[:half], ("data",))
+    decode = Mesh(devs[half:], ("data",))
+    return ServeMeshes(union, prefill, decode, True)

@@ -134,8 +134,10 @@ def gqa_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
         pos = cache["len"]                                     # (B,)
         if valid is None:
             valid = jnp.ones((b, s), bool)
-        kp = _scatter_chunk_pages(cache["kp"], k, pos, valid, page_table)
-        vp = _scatter_chunk_pages(cache["vp"], v, pos, valid, page_table)
+        kp = _pool_constraint(cfg, _scatter_chunk_pages(
+            cache["kp"], k, pos, valid, page_table))
+        vp = _pool_constraint(cfg, _scatter_chunk_pages(
+            cache["vp"], v, pos, valid, page_table))
         lens = pos + valid.sum(-1).astype(pos.dtype)
         qlens = pos[:, None] + jnp.arange(1, s + 1, dtype=pos.dtype)[None]
         if s == 1 and cfg.kernel_mode == "pallas":
@@ -222,6 +224,20 @@ def _page_targets(page: int, npb: int, pos, valid):
     tgt = pos[:, None] + jnp.arange(c, dtype=pos.dtype)[None, :]   # (B, C)
     blk = jnp.clip(tgt // page, 0, npb - 1)
     return blk, tgt % page
+
+
+def _pool_constraint(cfg: ModelConfig, pages: jnp.ndarray) -> jnp.ndarray:
+    """Sharded paged serving: keep the page pool's page dim (dim 0 of
+    the per-layer (NP, ...) view) on ``cfg.mesh_pool_axis`` across the
+    scatter, so jit propagation cannot re-replicate the pool after each
+    update (the pool dominates serve memory).  Follows the
+    ``_sp_constraint`` precedent in transformer.py — needs an ambient
+    mesh when set."""
+    if cfg.mesh_pool_axis is None:
+        return pages
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        pages, P(cfg.mesh_pool_axis, *([None] * (pages.ndim - 1))))
 
 
 def _scatter_chunk_pages(pages: jnp.ndarray, new: jnp.ndarray,
@@ -387,9 +403,10 @@ def mla_apply(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
         pos = cache["len"]
         if valid is None:
             valid = jnp.ones((b, s), bool)
-        ckv_p = _scatter_vec_pages(cache["ckvp"], ckv, pos, valid, page_table)
-        kr_p = _scatter_vec_pages(cache["krp"], kr[:, 0], pos, valid,
-                                  page_table)
+        ckv_p = _pool_constraint(cfg, _scatter_vec_pages(
+            cache["ckvp"], ckv, pos, valid, page_table))
+        kr_p = _pool_constraint(cfg, _scatter_vec_pages(
+            cache["krp"], kr[:, 0], pos, valid, page_table))
         lens = pos + valid.sum(-1).astype(pos.dtype)
         ckv_full = _gather_vec_pages(ckv_p, page_table)         # (B,Slog,r)
         kr_full = _gather_vec_pages(kr_p, page_table)[:, None]  # (B,1,Slog,dr)

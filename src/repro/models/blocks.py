@@ -189,6 +189,12 @@ def block_cache_init_paged(cfg: ModelConfig, kind: str, batch: int,
     page — unmapped table entries point there and its contents are never
     attended to because ``len`` masks them.  Only pure-attention kinds
     page; recurrent state (ssm/rwkv/hymba) has no growing KV to page.
+
+    Under sharded serving the pool leaves (``kp``/``vp``/``ckvp``/
+    ``krp``) shard their page dim over the data axis — see the
+    ``_PAGED_POOL`` rule in ``parallel/sharding.py`` and the in-jit
+    ``_pool_constraint`` in ``attention.py``; ``len`` stays replicated
+    (it is the scheduler's per-slot control state).
     """
     hd, kvh = cfg.hd, cfg.n_kv_heads
     if kind not in ("attn", "moe"):

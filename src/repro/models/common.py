@@ -100,6 +100,9 @@ class ModelConfig:
     act_sp: bool = False              # sequence-parallel residual stream
     mesh_dp_axes: Tuple[str, ...] = ("data",)   # set by launch/steps.py
     mesh_tp_axis: str = "model"
+    # sharded paged serving: constrain KV page pools' page dim to this
+    # mesh axis inside jit (None = leave placement to propagation)
+    mesh_pool_axis: Optional[str] = None
 
     @property
     def n_experts_padded(self) -> int:

@@ -54,6 +54,12 @@ class ModelBundle:
     prefill_paged: Optional[Callable] = None
     copy_pages: Optional[Callable] = None
     cache_reset_paged: Optional[Callable] = None
+    # disaggregated serving: migrate same-layout page blocks between
+    # the prefill staging pool and the decode pool (module-level
+    # functions, so _shared_jit compile caches are shared like
+    # copy_pages)
+    gather_pages: Optional[Callable] = None
+    scatter_pages: Optional[Callable] = None
 
 
 def cache_reset(cache: Any, keep: jnp.ndarray) -> Any:
@@ -112,4 +118,6 @@ def build_model(cfg: ModelConfig) -> ModelBundle:
             if paged else None),
         copy_pages=_t.lm_copy_pages if paged else None,
         cache_reset_paged=_t.lm_paged_reset if paged else None,
+        gather_pages=_t.lm_gather_pages if paged else None,
+        scatter_pages=_t.lm_scatter_pages if paged else None,
     )

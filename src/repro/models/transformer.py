@@ -165,6 +165,48 @@ def lm_copy_pages(caches: List[Any], src: jnp.ndarray, dst: jnp.ndarray
     return out
 
 
+def lm_gather_pages(caches: List[Any], pages: jnp.ndarray) -> List[Any]:
+    """Pull physical pages ``pages`` (NPB,) int32 out of every layer's
+    pool: leaf (count, NP, ...) -> block (count, NPB, ...).  One half of
+    the disaggregated prefill->decode migration — the blocks keep the
+    pool layout, so the matching :func:`lm_scatter_pages` on another
+    mesh is a pure placement move."""
+    out = []
+    for cache in caches:
+        blk = {}
+        attn = cache["attn"]
+        for key in _PAGE_KEYS:
+            if key in attn:
+                blk[key] = jnp.take(attn[key], pages, axis=1)
+        out.append(blk)
+    return out
+
+
+def lm_scatter_pages(caches: List[Any], blocks: List[Any],
+                     pages: jnp.ndarray, slot: jnp.ndarray,
+                     new_len: jnp.ndarray) -> List[Any]:
+    """Write migrated ``blocks`` (from :func:`lm_gather_pages`) into
+    physical pages ``pages`` of every layer's pool and set slot
+    ``slot``'s logical length to ``new_len``.  Page lists padded with
+    page 0 (the allocator's reserved trash page) are safe: its contents
+    are never attended."""
+    out = []
+    for cache, blk in zip(caches, blocks):
+        new = dict(cache)
+        attn = dict(cache["attn"])
+        for key in _PAGE_KEYS:
+            if key in attn:
+                a = attn[key]
+                attn[key] = a.at[:, pages].set(blk[key].astype(a.dtype))
+        ln = attn["len"]
+        onehot = jnp.arange(ln.shape[1]) == slot
+        attn["len"] = jnp.where(onehot[None, :], new_len.astype(ln.dtype),
+                                ln)
+        new["attn"] = attn
+        out.append(new)
+    return out
+
+
 def lm_paged_reset(caches: List[Any], keep: jnp.ndarray,
                    new_lens: jnp.ndarray) -> List[Any]:
     """Reset per-slot logical lengths for slots where ``keep`` is False

@@ -138,11 +138,20 @@ def batch_sharding(mesh: Mesh, ndim: int, rules: Optional[ShardingRules] = None
     return NamedSharding(mesh, P(dp, *([None] * (ndim - 1))))
 
 
+# paged KV pool leaves: stacked (layer_count, n_pages, ...); dim 1 is
+# the page-pool dim, the unit the paged serve loop allocates/migrates
+_PAGED_POOL = ("kp", "vp", "ckvp", "krp")
+
+
 def cache_shardings(cache_shape: Any, mesh: Mesh,
                     rules: Optional[ShardingRules] = None,
                     batch: int = 0) -> Any:
     """KV caches: batch over pod+data when divisible, else sequence over
-    data (sequence parallelism for long-context decode)."""
+    data (sequence parallelism for long-context decode).  Paged pool
+    leaves shard their page dim over ``data`` (pages are
+    batch-agnostic, so the batch rule never applies to them) and fall
+    back to replication — never sequence sharding, which would split
+    inside a page."""
     rules = rules or ShardingRules()
     dp = rules.dp_axes(mesh)
     dp_size = 1
@@ -153,6 +162,11 @@ def cache_shardings(cache_shape: Any, mesh: Mesh,
     def f(path, leaf):
         names = _path_names(path)
         shape = leaf.shape
+        if names and names[-1] in _PAGED_POOL and len(shape) >= 3:
+            if _divisible(shape[1], mesh, "data"):
+                return NamedSharding(
+                    mesh, P(None, "data", *([None] * (len(shape) - 2))))
+            return NamedSharding(mesh, P(*([None] * len(shape))))
         # leading dims: (layers, batch, ...) after stacking
         if len(shape) >= 3:
             b = shape[1]
@@ -170,3 +184,19 @@ def cache_shardings(cache_shape: Any, mesh: Mesh,
         return NamedSharding(mesh, P(*([None] * len(shape))))
 
     return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def page_table_sharding(mesh: Mesh, batch: int,
+                        rules: Optional[ShardingRules] = None
+                        ) -> NamedSharding:
+    """Page tables (B, npb) int32: batch over pod+data when divisible,
+    else replicated (tables are tiny; replication is never wrong)."""
+    rules = rules or ShardingRules()
+    dp = rules.dp_axes(mesh)
+    dp_size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp_size *= mesh.shape[a]
+    if dp is not None and batch > 0 and batch % dp_size == 0:
+        return NamedSharding(mesh, P(dp, None))
+    return NamedSharding(mesh, P(None, None))

@@ -69,6 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.channels import LocalChannel
 from repro.core.trace import Tracer
 
 # slot phases
@@ -118,44 +119,10 @@ def _validate_requests(requests: List[Request], s_max: int,
                              "requires Request.frames")
 
 
-class Channel:
-    """Bounded FIFO between the serving engines.
-
-    The serving analogue of the simulator's channel FIFOs: ``push``
-    refuses beyond ``capacity`` (backpressure), and every push/pop
-    reports the post-event depth to the tracer under the ``serve``
-    instance — so serve traces read exactly like DAE program traces.
-    """
-
-    def __init__(self, name: str, capacity: Optional[int] = None,
-                 tracer: Optional[Tracer] = None):
-        self.name = name
-        self.capacity = capacity
-        self._q: deque = deque()
-        self._tracer = tracer
-
-    def push(self, item: Any) -> bool:
-        if self.capacity is not None and len(self._q) >= self.capacity:
-            return False
-        self._q.append(item)
-        if self._tracer is not None:
-            self._tracer.on_occupancy("serve", self.name, len(self._q))
-        return True
-
-    def pop(self) -> Any:
-        item = self._q.popleft()
-        if self._tracer is not None:
-            self._tracer.on_occupancy("serve", self.name, len(self._q))
-        return item
-
-    def peek(self) -> Any:
-        return self._q[0]
-
-    def __len__(self) -> int:
-        return len(self._q)
-
-    def __bool__(self) -> bool:
-        return bool(self._q)
+# The serving channel moved to repro.channels (one protocol from the
+# simulator's Enq/Deq FIFOs to the shard_map mesh ring); ``Channel`` is
+# kept as a back-compat alias of the in-process transport.
+Channel = LocalChannel
 
 
 @dataclasses.dataclass
@@ -178,6 +145,8 @@ class ServeStats:
     preemptions: int = 0
     prefix_hits: int = 0
     prefix_tokens_reused: int = 0
+    # disaggregated serving: prefill->decode pool page migrations
+    migrations: int = 0
     # peak over rounds of sum(prompt + max_new) across concurrently
     # active slots — what a reservation-based contiguous allocator
     # would have had to set aside (the oversubscription witness)
@@ -344,13 +313,19 @@ class ServeLoop:
             self.enc_out = None                         # allocated lazily
 
         # explicit bounded channels between the engines
-        self.admit_q = Channel("admit", admit_capacity, tracer)
-        self.handoff = Channel("prefill_done", batch_slots, tracer)
-        self.free_slots = Channel("free_slots", batch_slots, tracer)
+        self._admit_capacity = admit_capacity
+        self._make_channels()
         for s in range(batch_slots):
             self.free_slots.push(s)
         self._overflow: deque = deque()     # beyond admit_q capacity
         self.stats = ServeStats()
+
+    def _make_channels(self) -> None:
+        """Engine-joining channels; the sharded loop overrides to place
+        handoff/free_slots on a mesh transport."""
+        self.admit_q = Channel("admit", self._admit_capacity, self.tracer)
+        self.handoff = Channel("prefill_done", self.b, self.tracer)
+        self.free_slots = Channel("free_slots", self.b, self.tracer)
 
     def _make_cache(self) -> None:
         """Cache + compiled-primitive setup; PagedServeLoop overrides."""
@@ -470,6 +445,10 @@ class ServeLoop:
             # which activates the slot when it pops the entry
             req = self.active[slot]
             self._on_prompt_complete(slot)
+            if self.active[slot] is not req:
+                # the hook preempted/parked the slot (e.g. the sharded
+                # loop's prefill->decode page migration ran dry)
+                continue
             first = self._first_token(slot, logits)
             if req.rid not in self.stats.ttft:   # resumes keep the original
                 self.stats.ttft[req.rid] = (time.perf_counter() - t0
@@ -758,9 +737,14 @@ class PagedServeLoop(ServeLoop):
         if reset:
             keep = np.ones(self.b, bool)
             keep[reset] = False
-            self.cache = self._reset_paged(
-                self.cache, jnp.asarray(keep),
-                jnp.asarray(new_lens, jnp.int32))
+            self._reset_slots(reset, keep, new_lens)
+
+    def _reset_slots(self, reset, keep, new_lens) -> None:
+        """Zero the cache lengths of freshly admitted slots; the sharded
+        loop overrides to also reset its prefill staging pool."""
+        self.cache = self._reset_paged(
+            self.cache, jnp.asarray(keep),
+            jnp.asarray(new_lens, jnp.int32))
 
     def _prefill_grant(self, slot: int, ptr: int, n: int) -> int:
         """Map pages under [ptr, ptr+n), copy-on-write if the write

@@ -1,0 +1,169 @@
+"""The unified channel protocol (repro.channels): one vocabulary from
+the simulator's Enq/Deq FIFOs through the serve loop to the shard_map
+mesh ring.  Every transport must report post-event depths through the
+same Tracer hook — that is the invariant the golden traces and serve
+parity tests build on."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh
+
+from repro.channels import ChannelBase, LocalChannel, MeshChannel, SimChannel
+from repro.core.trace import Tracer
+
+
+class RecordingTracer(Tracer):
+    def __init__(self):
+        self.occ = []
+        self.req = []
+
+    def on_occupancy(self, instance, channel, depth, t=0.0):
+        self.occ.append((instance, channel, depth, t))
+
+    def on_request(self, instance, channel, port, t_issue, t_done):
+        self.req.append((instance, channel, port, t_issue, t_done))
+
+
+# ---------------------------------------------------------------------------
+# shared protocol semantics, parametrized over host transports
+# ---------------------------------------------------------------------------
+
+
+def _make(transport, name="ch", capacity=3, tracer=None):
+    if transport == "local":
+        return LocalChannel(name, capacity, tracer)
+    if transport == "sim":
+        return SimChannel(name, capacity, tracer, instance="serve")
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    return MeshChannel(name, capacity, mesh, "data", tracer=tracer)
+
+
+TRANSPORTS = ("local", "sim", "mesh")
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_fifo_order_and_backpressure(transport):
+    c = _make(transport, capacity=2)
+    assert isinstance(c, ChannelBase)
+    assert c.transport == transport
+    assert len(c) == 0 and not c
+    assert c.push(1) and c.push(2)
+    assert c.full
+    assert not c.push(3)           # refused, no side effects
+    assert len(c) == 2
+    assert c.peek() == 1
+    assert c.pop() == 1 and c.pop() == 2
+    assert not c.full and len(c) == 0
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_post_event_depth_trace(transport):
+    tr = RecordingTracer()
+    c = _make(transport, name="q", capacity=4, tracer=tr)
+    c.push(10)
+    c.push(11)
+    c.pop()
+    c.push(12)
+    c.pop()
+    c.pop()
+    depths = [d for (_, _, d, _) in tr.occ]
+    assert depths == [1, 2, 1, 2, 1, 0]
+    assert all(inst == "serve" and ch == "q" for (inst, ch, _, _) in tr.occ)
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_refused_push_does_not_trace(transport):
+    tr = RecordingTracer()
+    c = _make(transport, capacity=1, tracer=tr)
+    c.push(1)
+    assert not c.push(2)
+    assert len(tr.occ) == 1        # only the accepted push traced
+
+
+@pytest.mark.parametrize("transport", ("local", "mesh"))
+def test_pop_empty_raises(transport):
+    c = _make(transport)
+    with pytest.raises(IndexError):
+        c.pop()
+
+
+# ---------------------------------------------------------------------------
+# sim transport: timed engine surface + conservation counters
+# ---------------------------------------------------------------------------
+
+
+def test_sim_timed_surface_counters_and_trace():
+    tr = RecordingTracer()
+    st = SimChannel()
+    st.push_timed(5.0, "v", "req", tr, "inst0", "a2e", t=3.0)
+    assert st.reqs == 1 and st.enqs == 0
+    assert st.front_ready == 5.0
+    assert tr.occ[-1] == ("inst0", "a2e", 1, 3.0)
+    assert st.pop_timed("resp", tr, "inst0", "a2e", t=6.0) == "v"
+    assert st.resps == 1 and st.deqs == 0
+    assert tr.occ[-1] == ("inst0", "a2e", 0, 6.0)
+    st.push_timed(2.0, 7, "enq", tr, "inst0", "e2w", t=1.0)
+    assert st.enqs == 1
+    assert st.pop_timed("deq", tr, "inst0", "e2w", t=4.0) == 7
+    assert st.deqs == 1
+    # the engines peek raw state: keep those attributes stable
+    assert hasattr(st, "fifo") and hasattr(st, "push_key")
+
+
+def test_sim_protocol_surface_maps_to_enq_deq():
+    st = SimChannel("q", capacity=2)
+    assert st.push("a") and st.push("b") and not st.push("c")
+    assert st.enqs == 2 and st.reqs == 0
+    assert st.front_ready == 0.0   # protocol pushes land immediately
+    assert st.pop() == "a"
+    assert st.deqs == 1
+
+
+def test_simulator_uses_shared_channel():
+    from repro.core import simulator
+    assert simulator._ChanState is SimChannel
+
+
+def test_serve_loop_channel_is_local_alias():
+    from repro.runtime import serve_loop
+    assert serve_loop.Channel is LocalChannel
+
+
+# ---------------------------------------------------------------------------
+# mesh transport: wire format + device ring
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_ring_wraps_and_carries_tuples():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    c = MeshChannel("handoff", 3, mesh, "data")
+    assert c.push(5)
+    assert c.push((7, 11))
+    assert c.push(42)
+    assert c.pop() == 5
+    assert c.pop() == (7, 11)
+    assert c.push(-3)              # tail wraps to ring slot 0
+    assert c.pop() == 42
+    assert c.pop() == -3
+    assert len(c) == 0
+
+
+def test_mesh_wire_format_rejections():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    c = MeshChannel("ctl", 2, mesh, "data", width=2)
+    with pytest.raises(TypeError):
+        c.push("not-an-int")
+    with pytest.raises(ValueError):
+        c.push((1, 2, 3))          # arity exceeds width
+    with pytest.raises(ValueError):
+        c.push(2 ** 40)            # does not fit int32
+
+
+def test_mesh_requires_finite_capacity_and_known_axis():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError):
+        MeshChannel("c", None, mesh, "data")
+    with pytest.raises(ValueError):
+        MeshChannel("c", 2, mesh, "model")
