@@ -18,6 +18,9 @@ Cell groups:
   * per-op ``default`` / ``tuned`` pairs — the analytic plan_rif
     fallback vs the tune-cache winner, ``tuned`` coordinate set;
   * ``chase`` — decoupled Pallas vs XLA fallback, parity *gated*;
+  * ``contended`` — the §5.4 wall-clock leg: the makespan of two
+    concurrent gmm dispatches under the solo winner's knobs vs the
+    ``tune_kernel(contenders=2)`` winner's knobs;
   * ``probe_vectorization`` — the hash_probe SMEM→VMEM vectorization
     win pinned against its pre-change wall-clock baseline;
   * ``compiled_vs_hand`` — the generic repro.compile lowering vs the
@@ -32,11 +35,14 @@ from __future__ import annotations
 
 from typing import List
 
+from benchmarks.roofline import kernel_bound_us
 from repro.bench import (BenchContext, Cell, CellResult, coords, measure,
                          run_cells)
 
 
 def cells(ctx: BenchContext) -> List[Cell]:
+    import math
+
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -94,6 +100,27 @@ def cells(ctx: BenchContext) -> List[Cell]:
         add(f"kernel/cap_sweep/hashtable/slack={slack}",
             coords("hashtable", "sim"), cap_cell(slack))
 
+    # -- grouped_matmul DaeProgram rif sweep --------------------------------
+    # the simulator twin of the expert-weight ring in
+    # kernels/grouped_matmul: route stream -> data-dependent weight fetch
+    def gmm_sim_cell(rif):
+        def run(c: BenchContext) -> CellResult:
+            from repro.core.simulator import FixedLatencyMemory, simulate
+            from repro.core.workloads import gmm_phases, make_gmm_data
+            data = make_gmm_data(c.sim_scale)
+            progs, mems, golden, check = gmm_phases(
+                data, 100, rif,
+                lambda port, vals: FixedLatencyMemory(vals, 100))
+            res = simulate(progs[0], mems)
+            assert check(res)
+            return CellResult(cycles=int(res.cycles),
+                              derived={"golden": int(golden)})
+        return run
+
+    for rif in (1, 8, 64):
+        add(f"kernel/rif_sweep/grouped_matmul/rif={rif}",
+            coords("grouped_matmul", "sim"), gmm_sim_cell(rif))
+
     # -- gather: decoupled kernel (interpret) vs XLA take -------------------
     # Knobs are passed explicitly so these baseline cells never pick up a
     # tuned config from a previous run's cache.
@@ -102,11 +129,17 @@ def cells(ctx: BenchContext) -> List[Cell]:
     table = jnp.asarray(r.standard_normal((gn, 256)), jnp.float32)
     idx = jnp.asarray(r.integers(0, gn, gm), jnp.int32)
 
+    # gathered rows move once HBM->VMEM and once back out
+    gather_bound = kernel_bound_us(0.0, 2 * gm * 256 * 4)
+
     def gather_cell(method):
         def run(c: BenchContext) -> CellResult:
             t = measure(lambda: dae_gather(table, idx, method=method,
                                            block_d=512, chunk=64, rif=8))
-            return CellResult(us_cold=t.us_cold, us_warm=t.us_warm)
+            derived = ({} if method == "ref"
+                       else {"roofline_bound_us": gather_bound})
+            return CellResult(us_cold=t.us_cold, us_warm=t.us_warm,
+                              derived=derived)
         return run
 
     for method in ("pipelined", "rif", "ref"):
@@ -140,11 +173,37 @@ def cells(ctx: BenchContext) -> List[Cell]:
                            jnp.int32)
     hl_keys = hl_heads + jnp.asarray(r.integers(0, chain, hl_m), jnp.int32)
 
+    from repro.kernels.grouped_matmul import grouped_matmul
+
+    gt, gd, gf = KERNEL_DIMS["grouped_matmul"]
+    g_e, g_bt = 4, 128
+    gmm_x = jnp.asarray(r.standard_normal((gt, gd)), jnp.float32)
+    gmm_w = jnp.asarray(r.standard_normal((g_e, gd, gf)), jnp.float32)
+    gmm_blk = jnp.asarray(r.integers(0, g_e, gt // g_bt), jnp.int32)
+
     # the cold-cache fallback knobs, mirrored from each dispatcher
     gather_rif0 = plan_rif(64 * 256 * 4).rif          # chunk * dp * f32
     merge_rif0 = plan_rif(256 * 4).rif                # tile * f32
     ss_rif0 = plan_rif(128 * 4).rif                   # block * i32
     hl_rif0 = plan_rif(ENTRY_LANES * 4).rif           # packed entry row
+    gmm_bd0 = min(512, gd)
+    gmm_rif0 = plan_rif(gmm_bd0 * 128 * 4).rif        # one (bd, bf) tile
+
+    # expected-on-hardware roofline bounds per decoupled op: the bytes
+    # the rings actually move plus MXU compute where it matters (the
+    # chase ops fetch one block per dependent step)
+    roofline_us = {
+        "dae_merge": kernel_bound_us(0.0, 2 * (2048 + 2048) * 4),
+        "batched_searchsorted": kernel_bound_us(
+            0.0, ss_m * math.ceil(math.log2(ss_n)) * 128 * 4),
+        "hash_lookup": kernel_bound_us(
+            0.0, hl_m * chain * ENTRY_LANES * 4),
+        "grouped_matmul": kernel_bound_us(
+            2.0 * gt * gd * gf,
+            (gt * gd + (gt // g_bt) * gd * gf + gt * gf) * 4),
+    }
+    roofline_us["dae_gather"] = gather_bound
+
     tuned_cells = {
         # op -> (dims, dtype, cold-cache-default call, tuned call)
         "dae_gather": (
@@ -167,12 +226,19 @@ def cells(ctx: BenchContext) -> List[Cell]:
                                 max_steps=chain, chunk=64, rif=hl_rif0),
             lambda: hash_lookup(hl_ek, hl_ev, hl_en, hl_heads, hl_keys,
                                 max_steps=chain)),
+        "grouped_matmul": (
+            (gt, gd, gf), jnp.float32.dtype,
+            lambda: grouped_matmul(gmm_x, gmm_w, gmm_blk, bt=g_bt, bf=128,
+                                   bd=gmm_bd0, rif=gmm_rif0),
+            lambda: grouped_matmul(gmm_x, gmm_w, gmm_blk, bt=g_bt)),
     }
 
-    def default_cell(default_fn):
+    def default_cell(op, default_fn):
         def run(c: BenchContext) -> CellResult:
             t = measure(default_fn)
-            return CellResult(us_cold=t.us_cold, us_warm=t.us_warm)
+            return CellResult(us_cold=t.us_cold, us_warm=t.us_warm,
+                              derived={"roofline_bound_us":
+                                       roofline_us[op]})
         return run
 
     def tuned_cell(op, dims, dtype, tuned_fn):
@@ -187,14 +253,16 @@ def cells(ctx: BenchContext) -> List[Cell]:
             # they are floats/strings here: informational, never diffed
             return CellResult(us_cold=t.us_cold, us_warm=t.us_warm,
                               derived={"config": cfg_s,
-                                       "tune_evals": float(res.evals)})
+                                       "tune_evals": float(res.evals),
+                                       "roofline_bound_us":
+                                       roofline_us[op]})
         return run
 
     for op, (dims, dtype, default_fn, tuned_fn) in tuned_cells.items():
         add(f"kernel/{op}/plan_default",
             coords(op, "kernel", engine="pallas", backend=backend,
                    tuned=False),
-            default_cell(default_fn))
+            default_cell(op, default_fn))
         add(f"kernel/{op}/tuned",
             coords(op, "kernel", engine="pallas", backend=backend,
                    tuned=True),
@@ -219,23 +287,73 @@ def cells(ctx: BenchContext) -> List[Cell]:
                                     chain)),
     }
 
-    def chase_cell(fn, ref_fn, method):
+    def chase_cell(op, fn, ref_fn, method):
         def run(c: BenchContext) -> CellResult:
             if method == "pallas":
                 np.testing.assert_array_equal(np.asarray(fn("pallas")),
                                               np.asarray(ref_fn()))
             t = measure(lambda: fn(method))
+            derived = {"parity": "ok"}
+            if method == "pallas":
+                derived["roofline_bound_us"] = roofline_us[op]
             return CellResult(us_cold=t.us_cold, us_warm=t.us_warm,
-                              derived={"parity": "ok"})
+                              derived=derived)
         return run
 
     for op, (fn, ref_fn) in chase_cells.items():
         add(f"kernel/{op}/decoupled",
             coords(op, "kernel", engine="pallas", backend=backend),
-            chase_cell(fn, ref_fn, "pallas"))
+            chase_cell(op, fn, ref_fn, "pallas"))
         add(f"kernel/{op}/xla_fallback",
             coords(op, "kernel", engine="xla", backend=backend),
-            chase_cell(fn, ref_fn, "ref"))
+            chase_cell(op, fn, ref_fn, "ref"))
+
+    # -- contended-vs-solo (§5.4 on the wall clock) -------------------------
+    # Both cells measure the SAME load — the makespan of two concurrent
+    # gmm dispatches — differing only in whose winner supplies the
+    # knobs: the solo tune-cache entry vs the ``contenders=2`` entry.
+    from concurrent.futures import ThreadPoolExecutor
+
+    def gmm_pair(kw):
+        def one():
+            return grouped_matmul(gmm_x, gmm_w, gmm_blk, bt=g_bt, **kw)
+
+        def pair():
+            with ThreadPoolExecutor(max_workers=2) as pool:
+                futs = [pool.submit(one) for _ in range(2)]
+                return [jax.block_until_ready(f.result()) for f in futs]
+        return pair
+
+    def gmm_contended_cell(contenders):
+        def run(c: BenchContext) -> CellResult:
+            from repro.kernels.common import resolve_interpret
+            from repro.tune import (dispatch_config, tune_kernel,
+                                    wallclock_tag)
+            res = tune_kernel("grouped_matmul", (gt, gd, gf),
+                              max_evals=evals, reps=2,
+                              contenders=contenders)
+            cfg = dispatch_config("grouped_matmul", (gt, gd, gf),
+                                  jnp.float32.dtype,
+                                  resolve_interpret(None),
+                                  mem=wallclock_tag(contenders))
+            kw = {k: cfg[k] for k in ("bf", "bd", "rif") if k in cfg}
+            t = measure(gmm_pair(kw))
+            cfg_s = ";".join(f"{k}={v}" for k, v in sorted(cfg.items()))
+            return CellResult(us_cold=t.us_cold, us_warm=t.us_warm,
+                              derived={"config": cfg_s,
+                                       "tune_evals": float(res.evals),
+                                       "roofline_bound_us":
+                                       2 * roofline_us["grouped_matmul"]})
+        return run
+
+    add("kernel/grouped_matmul/contended/solo_winner",
+        coords("grouped_matmul", "kernel", engine="pallas",
+               backend=backend, tenants=2, tuned=True),
+        gmm_contended_cell(1))
+    add("kernel/grouped_matmul/contended/contended_winner",
+        coords("grouped_matmul", "kernel", engine="pallas",
+               backend=backend, tenants=2, tuned=True),
+        gmm_contended_cell(2))
 
     # -- hash_probe vectorization pin ---------------------------------------
     # found/val state moved from per-scalar SMEM loops to VMEM vector

@@ -32,6 +32,18 @@ ROOT = Path(__file__).resolve().parents[1]
 DRYRUN = ROOT / "experiments" / "dryrun"
 
 
+def kernel_bound_us(flops: float, hbm_bytes: float) -> float:
+    """Roofline lower bound, in microseconds, for one kernel dispatch on
+    the modelled TPU: the slower of the compute term and the HBM term.
+
+    ``benchmarks/kernel_bench.py`` attaches this to the decoupled-kernel
+    cells so interpret-mode wall-clock (where the rings lose to XLA on
+    plumbing overhead) carries the expected-on-hardware bound alongside
+    it — informational in ``benchmarks.diff``, never exact-gated.
+    """
+    return max(flops / PEAK_FLOPS_BF16, hbm_bytes / HBM_BW) * 1e6
+
+
 def model_flops(arch: str, kind: str, seq_len: int, global_batch: int) -> dict:
     import sys
     sys.path.insert(0, str(ROOT / "src"))

@@ -157,6 +157,24 @@ def _build_frontier(scale: str, latency: int, rif: int) -> BuiltTarget:
         _oracle=_oracle_from_phases(phases, {"out": m}))
 
 
+def _build_spmv_gather(scale: str, latency: int, rif: int) -> BuiltTarget:
+    from repro.core import workloads as wl
+
+    data = wl.make_spmv_data(scale)
+    m = data["nnz"]
+
+    def phases():
+        return wl.spmv_gather_phases(data, latency, rif,
+                                     _mem_factory(latency))
+
+    progs, mems, _g, _c = phases()
+    return BuiltTarget(
+        name="spmv_gather", prog=progs[0],
+        memories={p: list(mem.data) for p, mem in mems.items()},
+        chase=None, out_lens={"out": m},
+        _oracle=_oracle_from_phases(phases, {"out": m}))
+
+
 def _build_binsearch(scale: str, latency: int, rif: int, *,
                      early: bool) -> BuiltTarget:
     from repro.core import workloads as wl
@@ -180,6 +198,7 @@ def _build_binsearch(scale: str, latency: int, rif: int, *,
 COMPILE_TARGETS: Dict[str, Callable[..., BuiltTarget]] = {
     "gather": _build_gather,
     "frontier_gather": _build_frontier,
+    "spmv_gather": _build_spmv_gather,
     "binsearch": lambda scale, latency, rif:
         _build_binsearch(scale, latency, rif, early=True),
     "binsearch_for": lambda scale, latency, rif:

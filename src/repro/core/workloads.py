@@ -72,7 +72,9 @@ from repro.core.trace import Tracer, TraceSummary
 __all__ = ["BENCHMARKS", "CONFIGS", "MULTI_BENCHMARKS", "run_workload",
            "run_workload_multi", "WorkloadReport", "MultiWorkloadReport",
            "make_gather_data", "gather_ref", "gather_phases",
-           "make_frontier_data", "frontier_ref", "frontier_phases"]
+           "make_frontier_data", "frontier_ref", "frontier_phases",
+           "make_gmm_data", "gmm_ref", "gmm_phases",
+           "spmv_gather_ref", "spmv_gather_phases"]
 
 CONFIGS = ("vitis", "vitis_dec", "rhls", "rhls_stream", "rhls_dec")
 BENCHMARKS = (
@@ -650,6 +652,133 @@ def frontier_phases(data, latency, rif, mem_factory, cap=None):
         return all(int(g) == int(e) for g, e in zip(got, expected))
 
     return progs, mems, 2 * m, check
+
+
+def spmv_gather_ref(cols: np.ndarray, vec: np.ndarray) -> np.ndarray:
+    """The decoupled vec-gather phase of SPMV: vec[cols[p]] per nnz."""
+    return vec[cols]
+
+
+def spmv_gather_phases(data, latency, rif, mem_factory, cap=None):
+    """SPMV's decoupled vector fetch as a two-channel DAE program.
+
+    The paper's Listing 2 decouples the *products* from the row-pointer
+    loads; the irregular half of that kernel is the ``vec[cols[p]]``
+    gather, which is what lowers onto the ring emitter (the accumulation
+    is a dense reduction the compiler's store checker rejects — see
+    ``repro.compile``).  Access issues the (static) ``cols`` addresses;
+    a deref stage turns each landed column id into a ``vec`` request;
+    Execute stores the landed vector values in nnz order.
+    """
+    # float32: the compiled kernel stages port data through float32
+    # VMEM, so the staged values must survive that cast exactly
+    cols, vec = data["cols"], data["vec"].astype(np.float32)
+    m = len(cols)
+    mems = {
+        "cols": mem_factory("cols", [int(c) for c in cols]),
+        "vec": mem_factory("vec", [float(v) for v in vec]),
+        "out": FixedLatencyMemory([None] * m, latency),
+    }
+    cols_ch = LoadChannel("sg_cols", capacity=_chan_cap(rif, cap),
+                          port="cols")
+    vec_ch = LoadChannel("sg_vec", capacity=_chan_cap(rif, cap),
+                         port="vec")
+
+    def access():
+        for p in range(m):
+            yield Req(cols_ch, p)
+
+    def deref():
+        for _ in range(m):
+            c = yield Resp(cols_ch)
+            yield Req(vec_ch, int(c))
+
+    def execute():
+        for p in range(m):
+            yield Fused(Resp(vec_ch), lambda v, p=p: Store("out", p, v))
+
+    progs = [DaeProgram("spmv_gather[rhls_dec]",
+                        [Process("access", access),
+                         Process("deref", deref),
+                         Process("execute", execute)])]
+    expected = spmv_gather_ref(cols, vec)
+
+    def check(result: SimResult) -> bool:
+        got = result.stored_array("out", m)
+        return all(float(g) == float(e) for g, e in zip(got, expected))
+
+    return progs, mems, 2 * m, check
+
+
+def make_gmm_data(scale: str, seed: int = 8) -> Dict[str, Any]:
+    nblocks, d, f, e = {
+        "paper": (256, 8, 8, 16),
+        "small": (24, 4, 4, 6),
+    }[scale]
+    r = _rng(seed)
+    block_expert = r.integers(0, e, size=nblocks).astype(np.int64)
+    # force at least one empty expert group — the routing edge the
+    # kernel (and its Pallas twin) must survive without special-casing
+    block_expert[block_expert == e - 1] = 0
+    x = r.standard_normal((nblocks, d))
+    w = r.standard_normal((e, d, f))
+    return {"x": x, "w": w, "block_expert": block_expert, "e": e}
+
+
+def gmm_ref(x: np.ndarray, w: np.ndarray,
+            block_expert: np.ndarray) -> np.ndarray:
+    """Per-block expert matmul: out[i] = x[i] @ w[block_expert[i]]."""
+    return np.stack([x[i] @ w[int(eid)]
+                     for i, eid in enumerate(block_expert)])
+
+
+def gmm_phases(data, latency, rif, mem_factory, cap=None):
+    """Grouped expert matmul as a two-channel DAE program — the
+    simulator twin of ``repro.kernels.grouped_matmul``.
+
+    Access issues the (static) routing-stream addresses; a deref stage
+    turns each landed expert id into a weight-table request (the
+    irregular, data-dependent load — the same address stream the Pallas
+    kernel's weight ring fetches ``rif`` tiles ahead); Execute multiplies
+    the landed expert weights into the block's tokens and stores the
+    block product.
+    """
+    x, w, block_expert = data["x"], data["w"], data["block_expert"]
+    nb = len(block_expert)
+    mems = {
+        "route": mem_factory("route", [int(v) for v in block_expert]),
+        "wtab": mem_factory("wtab", [w[j] for j in range(len(w))]),
+        "out": FixedLatencyMemory([None] * nb, latency),
+    }
+    route_ch = LoadChannel("gm_route", capacity=_chan_cap(rif, cap),
+                           port="route")
+    w_ch = LoadChannel("gm_w", capacity=_chan_cap(rif, cap), port="wtab")
+
+    def access():
+        for i in range(nb):
+            yield Req(route_ch, i)
+
+    def deref():
+        for _ in range(nb):
+            v = yield Resp(route_ch)
+            yield Req(w_ch, int(v))
+
+    def execute():
+        for i in range(nb):
+            yield Fused(Resp(w_ch),
+                        lambda wt, i=i: Store("out", i, x[i] @ wt))
+
+    progs = [DaeProgram("grouped_matmul[rhls_dec]",
+                        [Process("access", access),
+                         Process("deref", deref),
+                         Process("execute", execute)])]
+    expected = gmm_ref(x, w, block_expert)
+
+    def check(result: SimResult) -> bool:
+        got = result.stored_array("out", nb)
+        return all(np.array_equal(g, e) for g, e in zip(got, expected))
+
+    return progs, mems, 2 * nb, check
 
 
 # ---------------------------------------------------------------------------

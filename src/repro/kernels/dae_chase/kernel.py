@@ -33,7 +33,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ring import RingChannel, access_execute, \
-    ring_scratch_shapes
+    clamp_rif, ring_scratch_shapes
 
 # packed hash-table entry rows are padded to one DMA-aligned lane group
 ENTRY_LANES = 128
@@ -77,7 +77,7 @@ def searchsorted_blocks(tiles: jax.Array, blk: jax.Array, keys: jax.Array,
     m = keys.shape[0]
     nb, block = tiles.shape
     assert m % chunk == 0, (m, chunk)
-    rif = max(1, min(rif, chunk))
+    rif = clamp_rif(rif, chunk)
     grid = (m // chunk,)
 
     kernel = functools.partial(_searchsorted_kernel, chunk=chunk, rif=rif,
@@ -166,7 +166,7 @@ def hash_probe(packed: jax.Array, heads: jax.Array, keys: jax.Array, *,
     m = heads.shape[0]
     n = packed.shape[0]
     assert m % chunk == 0, (m, chunk)
-    rif = max(1, min(rif, chunk))
+    rif = clamp_rif(rif, chunk)
     grid = (m // chunk,)
 
     kernel = functools.partial(_hash_probe_kernel, chunk=chunk, rif=rif,

@@ -36,7 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ring import RingChannel, ring_scratch_shapes, ring_step
+from repro.kernels.ring import (RingChannel, clamp_rif,
+                                ring_scratch_shapes, ring_step)
 
 
 def bitonic_merge_first_half(v: jnp.ndarray) -> jnp.ndarray:
@@ -76,7 +77,7 @@ def merge_tiles(a_pad: jax.Array, b_pad: jax.Array, starts_a: jax.Array,
     merge-path splits; output is n_out = n_tiles * tile elements.
     ``rif`` window pairs stream ahead of the consuming grid step."""
     n_tiles = starts_a.shape[0]
-    rif = max(1, min(rif, n_tiles))
+    rif = clamp_rif(rif, n_tiles)
     kernel = functools.partial(_merge_kernel, tile=tile, n_tiles=n_tiles,
                                rif=rif)
     return pl.pallas_call(

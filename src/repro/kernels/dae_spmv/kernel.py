@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ring import RingChannel, ring_scratch_shapes, ring_step
+from repro.kernels.ring import (RingChannel, clamp_rif,
+                                ring_scratch_shapes, ring_step)
 
 
 def _spmv_kernel(row_ref, col_ref, val_ref, vec_hbm, out_ref, vscr, vsem, *,
@@ -63,7 +64,7 @@ def bsr_spmv(val_blocks: jax.Array, row_ids: jax.Array, col_ids: jax.Array,
     rows with zero blocks); vec_tiles (KB, BK) -> out (nrows_blocks, BM).
     ``rif`` vec-tile fetches stream ahead of the consuming grid step."""
     nb, bm, bk = val_blocks.shape
-    rif = max(1, min(rif, nb))
+    rif = clamp_rif(rif, nb)
     grid = (nb,)
     kernel = functools.partial(_spmv_kernel, nb=nb, rif=rif)
     return pl.pallas_call(

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ring import RingChannel, ring_scratch_shapes, ring_step
+from repro.kernels.ring import (RingChannel, clamp_rif,
+                                ring_scratch_shapes, ring_step)
 
 NEG_INF = -1e30
 
@@ -179,7 +180,7 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     b, kvh, g, d = q.shape
     s = k_cache.shape[2]
     nk = s // bk
-    rif = max(1, min(rif, nk))
+    rif = clamp_rif(rif, nk)
     grid = (b, kvh, nk)
 
     kernel = functools.partial(_decode_kernel, bk=bk, nk=nk, rif=rif,
@@ -242,7 +243,7 @@ def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     b, kvh, g, d = q.shape
     n_pages, _, page, _ = k_pages.shape
     npb = page_table.shape[1]
-    rif = max(1, min(rif, npb))
+    rif = clamp_rif(rif, npb)
     grid = (b, kvh, npb)
 
     kernel = functools.partial(_paged_decode_kernel, bk=page, nk=npb,

@@ -8,47 +8,68 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import resolve_interpret, round_up, tuned_knobs
+from repro.kernels.common import (cdiv, resolve_interpret, ring_rif,
+                                  round_up, tuned_knobs)
 from repro.kernels.grouped_matmul import kernel as _k
 from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
 
 
-@functools.partial(jax.jit, static_argnames=("bt", "bf", "bd", "interpret",
-                                              "method"))
-def _gmm_impl(x, w, block_expert, *, bt, bf, bd, interpret, method):
+@functools.partial(jax.jit, static_argnames=("bt", "bf", "bd", "rif",
+                                              "interpret", "method"))
+def _gmm_impl(x, w, block_expert, *, bt, bf, bd, rif, interpret, method):
     if method == "ref":
         return grouped_matmul_ref(x, w, block_expert, bt)
     t, d = x.shape
     e, _, f = w.shape
-    dp, fp = round_up(d, bd), round_up(f, bf)
+    tp, dp, fp = round_up(t, bt), round_up(d, bd), round_up(f, bf)
+    if tp != t:
+        # pad-and-mask tail block: zero token rows multiply to zero
+        # output rows, sliced back off below
+        x = jnp.pad(x, ((0, tp - t), (0, 0)))
     if dp != d:
         x = jnp.pad(x, ((0, 0), (0, dp - d)))
         w = jnp.pad(w, ((0, 0), (0, dp - d), (0, 0)))
     if fp != f:
         w = jnp.pad(w, ((0, 0), (0, 0), (0, fp - f)))
     out = _k.gmm(x, w, block_expert.astype(jnp.int32), bt=bt, bf=bf, bd=bd,
-                 interpret=interpret)
-    return out[:, :f]
+                 rif=rif, interpret=interpret)
+    return out[:t, :f]
 
 
 def grouped_matmul(x: jax.Array, w: jax.Array, block_expert: jax.Array, *,
                    bt: int = 128, bf: Optional[int] = None,
-                   bd: Optional[int] = None, method: str = "pallas",
+                   bd: Optional[int] = None, rif: Optional[int] = None,
+                   method: str = "pallas",
                    interpret: Optional[bool] = None) -> jax.Array:
     """Expert-grouped GEMM: x (T, D) with tokens sorted by expert and
-    padded so groups align to ``bt``; block_expert (T//bt,) is the expert
-    of each token block; w (E, D, F).  Returns (T, F).
+    grouped into ``bt``-token blocks; block_expert (ceil(T/bt),) is the
+    expert of each token block; w (E, D, F).  Returns (T, F).
 
-    ``bf``/``bd`` left ``None`` resolve via the tune cache (128/512)."""
+    A tail block (``T % bt != 0``) is padded with zero token rows and
+    the padding is masked back off the result; ``T == 0`` (every expert
+    group empty) short-circuits to an empty (0, F) result.  Experts that
+    no block routes to are simply never fetched.
+
+    ``bf``/``bd`` left ``None`` resolve via the tune cache (128/512);
+    ``rif`` (the expert-weight ring depth) resolves explicit →
+    tune-cache → ``plan_rif`` over one (bd, bf) tile's byte size.
+    """
     t, d = x.shape
-    if t % bt:
-        raise ValueError(f"T={t} must be a multiple of bt={bt}")
+    f = w.shape[2]
+    nblk = cdiv(t, bt)
+    if block_expert.shape[0] != nblk:
+        raise ValueError(
+            f"block_expert has {block_expert.shape[0]} entries for "
+            f"{nblk} token blocks (T={t}, bt={bt})")
+    if t == 0:
+        return jnp.zeros((0, f), x.dtype)
     interp = resolve_interpret(interpret)
-    if bf is None or bd is None:
-        knobs = tuned_knobs("grouped_matmul", (t, d, w.shape[2]), x.dtype,
-                            interp, bf=(bf, 128), bd=(bd, 512))
-        bf, bd = knobs["bf"], knobs["bd"]
+    if bf is None or bd is None or rif is None:
+        knobs = tuned_knobs("grouped_matmul", (t, d, f), x.dtype, interp,
+                            bf=(bf, 128), bd=(bd, 512), rif=(rif, None))
+        bf, bd, rif = knobs["bf"], knobs["bd"], knobs["rif"]
     bd = min(bd, round_up(d, 128))
-    bf = min(bf, round_up(w.shape[2], 128))
-    return _gmm_impl(x, w, block_expert, bt=bt, bf=bf, bd=bd,
+    bf = min(bf, round_up(f, 128))
+    rif = ring_rif(rif, bd * bf * x.dtype.itemsize)
+    return _gmm_impl(x, w, block_expert, bt=bt, bf=bf, bd=bd, rif=rif,
                      interpret=interp, method=method)

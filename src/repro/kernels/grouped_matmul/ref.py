@@ -7,9 +7,11 @@ import jax.numpy as jnp
 
 def grouped_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
                        block_expert: jnp.ndarray, bt: int) -> jnp.ndarray:
-    """x (T, D); w (E, D, F); block_expert (T//bt,) expert id per token
-    block (tokens pre-sorted/padded by expert)."""
-    e_t = jnp.repeat(block_expert, bt)                # (T,)
+    """x (T, D); w (E, D, F); block_expert (ceil(T/bt),) expert id per
+    token block (tokens pre-sorted by expert; a tail block shorter than
+    ``bt`` keeps its block's expert)."""
+    t = x.shape[0]
+    e_t = jnp.repeat(block_expert, bt)[:t]            # (T,)
     w_t = jnp.take(w, e_t, axis=0)                    # (T, D, F)
     return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
                       w_t.astype(jnp.float32)).astype(x.dtype)

@@ -51,8 +51,15 @@ import jax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["RingChannel", "ring_scratch_shapes", "access_execute",
-           "ring_step"]
+__all__ = ["RingChannel", "ring_scratch_shapes", "clamp_rif",
+           "access_execute", "ring_step"]
+
+
+def clamp_rif(rif: int, n: int) -> int:
+    """Clamp a requested ring depth to the request-stream length: a ring
+    deeper than the stream never fills (its tail slots would hold copies
+    no response ever waits on), and depth 0 cannot make progress."""
+    return max(1, min(rif, n))
 
 
 def ring_scratch_shapes(rif: int, item_shape: Tuple[int, ...], dtype

@@ -29,7 +29,7 @@ from repro.tune.cache import (CacheEntry, TuneCache, cache_path,
                               default_cache, make_key, reset_default_cache)
 from repro.tune.runners import (KERNEL_DIMS, backend_tag, compiled_runner,
                                 kernel_runner, multi_workload_runner,
-                                workload_runner)
+                                wallclock_tag, workload_runner)
 from repro.tune.search import TuneResult, search
 from repro.tune.space import (Config, SearchSpace, compiled_space,
                               kernel_space, workload_space)
@@ -39,24 +39,32 @@ __all__ = [
     "cache_path", "default_cache", "reset_default_cache", "make_key",
     "kernel_space", "workload_space", "compiled_space", "kernel_runner",
     "compiled_runner", "workload_runner", "multi_workload_runner",
-    "KERNEL_DIMS", "tune_kernel", "tune_workload", "tune_compiled",
-    "dispatch_config",
+    "KERNEL_DIMS", "wallclock_tag", "tune_kernel", "tune_workload",
+    "tune_compiled", "dispatch_config",
 ]
 
 
 def tune_kernel(op: str, dims: Optional[Tuple[int, ...]] = None, *,
                 interpret: Optional[bool] = None, reps: int = 2,
                 max_evals: int = 24, strategy: str = "auto",
+                contenders: int = 1,
                 cache: Optional[TuneCache] = None,
                 force: bool = False) -> TuneResult:
     """Tune kernel ``op`` at ``dims`` by wall-clock and persist the winner.
 
     A prior winner in the cache short-circuits the search (returned as a
     zero-eval :class:`TuneResult`) unless ``force``.
+
+    ``contenders > 1`` tunes for the §5.4 shared-memory contention
+    regime: each config is scored by the makespan of N concurrent
+    dispatches of the kernel, and the winner persists under a distinct
+    per-N key (``wallclock:contenders=N``) so contention-aware winners
+    never shadow the solo ones — the wall-clock mirror of
+    ``tune_workload(instances=N)``.
     """
     cache = cache or default_cache()
     measure, key, dims = kernel_runner(op, dims, interpret=interpret,
-                                       reps=reps)
+                                       reps=reps, contenders=contenders)
     if not force:
         hit = cache.get(key)
         if hit is not None:
@@ -67,7 +75,7 @@ def tune_kernel(op: str, dims: Optional[Tuple[int, ...]] = None, *,
     res = search(space, measure, max_evals=max_evals, strategy=strategy)
     entry = CacheEntry(config=res.best, score=res.best_score,
                        baseline_score=res.seed_score,
-                       evals=res.evals, note="wallclock")
+                       evals=res.evals, note=wallclock_tag(contenders))
     cache.put(key, entry)
     # some ops dispatch under transformed dims (e.g. dae_spmv's rif
     # lookup sees BSR operands while the winner is stored at CSR dims);
@@ -80,7 +88,8 @@ def tune_kernel(op: str, dims: Optional[Tuple[int, ...]] = None, *,
                                        score=res.best_score,
                                        baseline_score=res.seed_score,
                                        evals=res.evals,
-                                       note="wallclock-alias"))
+                                       note=wallclock_tag(contenders)
+                                       + "-alias"))
     return res
 
 

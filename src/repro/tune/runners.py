@@ -30,7 +30,7 @@ from repro.tune.space import Config
 
 __all__ = ["kernel_runner", "compiled_runner", "workload_runner",
            "multi_workload_runner", "KERNEL_DIMS", "backend_tag",
-           "time_callable"]
+           "time_callable", "wallclock_tag"]
 
 # default problem dimensions per op: modest sizes so a CPU interpret-mode
 # tuning sweep finishes in seconds, big enough that block shape matters
@@ -52,16 +52,48 @@ def backend_tag(interpret: bool) -> str:
     return "interpret" if interpret else jax.default_backend()
 
 
-def time_callable(fn: Callable[[], object], reps: int = 3) -> float:
-    """Best-of-``reps`` wall time in seconds (first call compiles)."""
+def time_callable(fn: Callable[[], object], reps: int = 3,
+                  contenders: int = 1) -> float:
+    """Best-of-``reps`` wall time in seconds (first call compiles).
+
+    ``contenders > 1`` times the *makespan* of N concurrent dispatches
+    of ``fn`` per rep, launched from N threads (jax dispatch releases
+    the GIL while the backend executes) — the paper's §5.4 shared-memory
+    contention regime applied to wall-clock tuning, mirroring the
+    simulator's ``multi_workload_runner``.
+    """
     import jax
-    jax.block_until_ready(fn())
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
+    if contenders <= 1:
         jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+    from concurrent.futures import ThreadPoolExecutor
+    with ThreadPoolExecutor(max_workers=contenders) as pool:
+        def makespan() -> None:
+            futs = [pool.submit(fn) for _ in range(contenders)]
+            for fu in futs:
+                jax.block_until_ready(fu.result())
+        makespan()  # warm every contender's compile before timing
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            makespan()
+            best = min(best, time.perf_counter() - t0)
     return best
+
+
+def wallclock_tag(contenders: int) -> str:
+    """Cache-key mem tag for wall-clock runs: solo keeps the historical
+    ``"wallclock"`` tag; contended runs key per-N (mirroring
+    ``tune_workload(instances=N)``) so a winner measured under
+    shared-memory contention never shadows the solo winner."""
+    if contenders <= 1:
+        return "wallclock"
+    return f"wallclock:contenders={contenders}"
 
 
 # ---------------------------------------------------------------------------
@@ -69,7 +101,7 @@ def time_callable(fn: Callable[[], object], reps: int = 3) -> float:
 # ---------------------------------------------------------------------------
 
 
-def _gather_measure(dims, interpret, reps):
+def _gather_measure(dims, interpret, reps, contenders=1):
     import jax.numpy as jnp
     from repro.kernels.dae_gather import dae_gather
     n, d, m = dims
@@ -85,12 +117,13 @@ def _gather_measure(dims, interpret, reps):
               "chunk": cfg.get("chunk", 64),
               "rif": cfg.get("rif", 8),
               "interpret": interpret}
-        return time_callable(lambda: dae_gather(table, idx, **kw), reps)
+        return time_callable(lambda: dae_gather(table, idx, **kw), reps,
+                             contenders=contenders)
 
     return measure, (n, d, m), "float32"
 
 
-def _merge_measure(dims, interpret, reps):
+def _merge_measure(dims, interpret, reps, contenders=1):
     import jax.numpy as jnp
     from repro.kernels.dae_merge import merge_sorted
     n, m = dims
@@ -102,12 +135,13 @@ def _merge_measure(dims, interpret, reps):
         return time_callable(
             lambda: merge_sorted(a, b, tile=cfg["tile"],
                                  rif=cfg.get("rif", 2),
-                                 interpret=interpret), reps)
+                                 interpret=interpret), reps,
+            contenders=contenders)
 
     return measure, (n, m), "float32"
 
 
-def _flash_measure(dims, interpret, reps):
+def _flash_measure(dims, interpret, reps, contenders=1):
     import jax.numpy as jnp
     from repro.kernels.flash_attention import flash_attention
     sq, sk, d = dims
@@ -119,12 +153,13 @@ def _flash_measure(dims, interpret, reps):
     def measure(cfg: Config) -> float:
         return time_callable(
             lambda: flash_attention(q, k, v, bq=cfg["bq"], bk=cfg["bk"],
-                                    interpret=interpret), reps)
+                                    interpret=interpret), reps,
+            contenders=contenders)
 
     return measure, (sq, sk, d), "float32"
 
 
-def _flash_decode_measure(dims, interpret, reps):
+def _flash_decode_measure(dims, interpret, reps, contenders=1):
     import jax.numpy as jnp
     from repro.kernels.flash_attention import flash_decode
     s, d = dims
@@ -139,12 +174,13 @@ def _flash_decode_measure(dims, interpret, reps):
         return time_callable(
             lambda: flash_decode(q, kc, vc, lens, bk=cfg["bk"],
                                  rif=cfg.get("rif", 2),
-                                 interpret=interpret), reps)
+                                 interpret=interpret), reps,
+            contenders=contenders)
 
     return measure, (s, d), "float32"
 
 
-def _flash_decode_paged_measure(dims, interpret, reps):
+def _flash_decode_paged_measure(dims, interpret, reps, contenders=1):
     import jax.numpy as jnp
     from repro.kernels.flash_attention.ops import flash_decode_paged
     page, d = dims
@@ -163,12 +199,13 @@ def _flash_decode_paged_measure(dims, interpret, reps):
         return time_callable(
             lambda: flash_decode_paged(q, kp, vp, pt, lens,
                                        rif=cfg.get("rif", 2),
-                                       interpret=interpret), reps)
+                                       interpret=interpret), reps,
+            contenders=contenders)
 
     return measure, (page, d), "float32"
 
 
-def _gmm_measure(dims, interpret, reps):
+def _gmm_measure(dims, interpret, reps, contenders=1):
     import jax.numpy as jnp
     from repro.kernels.grouped_matmul import grouped_matmul
     t, d, f = dims
@@ -181,12 +218,14 @@ def _gmm_measure(dims, interpret, reps):
     def measure(cfg: Config) -> float:
         return time_callable(
             lambda: grouped_matmul(x, w, blk, bt=bt, bf=cfg["bf"],
-                                   bd=cfg["bd"], interpret=interpret), reps)
+                                   bd=cfg["bd"], rif=cfg.get("rif", 8),
+                                   interpret=interpret), reps,
+            contenders=contenders)
 
     return measure, (t, d, f), "float32"
 
 
-def _searchsorted_measure(dims, interpret, reps):
+def _searchsorted_measure(dims, interpret, reps, contenders=1):
     import jax.numpy as jnp
     from repro.kernels.dae_chase import batched_searchsorted
     n, m = dims
@@ -199,12 +238,13 @@ def _searchsorted_measure(dims, interpret, reps):
             lambda: batched_searchsorted(table, keys, block=cfg["block"],
                                          chunk=cfg.get("chunk", 64),
                                          rif=cfg.get("rif", 8),
-                                         interpret=interpret), reps)
+                                         interpret=interpret), reps,
+            contenders=contenders)
 
     return measure, (n, m), "int32"
 
 
-def _hash_measure(dims, interpret, reps):
+def _hash_measure(dims, interpret, reps, contenders=1):
     import jax.numpy as jnp
     from repro.kernels.dae_chase import hash_lookup
     n, m = dims
@@ -222,12 +262,13 @@ def _hash_measure(dims, interpret, reps):
             lambda: hash_lookup(ek, ev, en, heads, keys, max_steps=chain,
                                 chunk=cfg.get("chunk", 64),
                                 rif=cfg.get("rif", 8),
-                                interpret=interpret), reps)
+                                interpret=interpret), reps,
+            contenders=contenders)
 
     return measure, (n, m), "int32"
 
 
-def _spmv_measure(dims, interpret, reps):
+def _spmv_measure(dims, interpret, reps, contenders=1):
     import jax.numpy as jnp
     from repro.kernels.dae_spmv import csr_to_bsr, dae_spmv
     nrows, ncols, nnz = dims
@@ -248,7 +289,7 @@ def _spmv_measure(dims, interpret, reps):
         return time_callable(
             lambda: dae_spmv(vbj, rij, cij, vec, nrb,
                              rif=cfg.get("rif", 2), interpret=interpret),
-            reps)
+            reps, contenders=contenders)
 
     def alias_keys(best: Config):
         # csr_to_bsr dispatches its block shape under the CSR dims this
@@ -259,7 +300,8 @@ def _spmv_measure(dims, interpret, reps):
                                              bm=best["bm"], bk=best["bk"])
         bsr_dims = (nrb * best["bm"], ncols, len(vb))
         return [make_key("dae_spmv", bsr_dims, "float32",
-                         backend_tag(interpret), "wallclock")]
+                         backend_tag(interpret),
+                         wallclock_tag(contenders))]
 
     measure.alias_keys = alias_keys
     return measure, (nrows, ncols, nnz), "float32"
@@ -279,19 +321,26 @@ _KERNEL_MEASURES = {
 
 
 def kernel_runner(op: str, dims: Optional[Tuple[int, ...]] = None, *,
-                  interpret: Optional[bool] = None, reps: int = 2):
+                  interpret: Optional[bool] = None, reps: int = 2,
+                  contenders: int = 1):
     """Wall-clock measurement for kernel ``op``.
 
     Returns ``(measure, key, dims)`` where ``key`` is the cache key the
-    winner should be stored under.
+    winner should be stored under.  ``contenders > 1`` scores each
+    config by the makespan of N concurrent dispatches and keys the
+    winner under the per-N ``wallclock:contenders=N`` tag.
     """
     from repro.kernels.common import resolve_interpret
     if op not in _KERNEL_MEASURES:
         raise KeyError(f"no kernel runner for {op!r}")
+    if contenders < 1:
+        raise ValueError(f"contenders must be >= 1, got {contenders}")
     dims = tuple(dims or KERNEL_DIMS[op])
     interp = resolve_interpret(interpret)
-    measure, shape, dtype = _KERNEL_MEASURES[op](dims, interp, reps)
-    key = make_key(op, shape, dtype, backend_tag(interp), "wallclock")
+    measure, shape, dtype = _KERNEL_MEASURES[op](dims, interp, reps,
+                                                 contenders)
+    key = make_key(op, shape, dtype, backend_tag(interp),
+                   wallclock_tag(contenders))
     return measure, key, dims
 
 

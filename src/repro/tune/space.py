@@ -159,11 +159,18 @@ def _flash_decode_paged_space(page: int, d: int) -> SearchSpace:
     }, {"rif": plan.rif}))
 
 
-def _gmm_space(t: int, d: int, f: int) -> SearchSpace:
+def _gmm_space(t: int, d: int, f: int, itemsize: int = 4) -> SearchSpace:
+    """Grouped expert matmul: MXU block shapes plus the expert-weight
+    ring depth (§4.2's RIF, one (bd, bf) weight tile per request)."""
     bfs = tuple(b for b in (128, 256, 512) if b <= max(128, f))
     bds = tuple(b for b in (128, 256, 512, 1024) if b <= max(128, d))
-    return _snapped(SearchSpace("grouped_matmul", {"bf": bfs, "bd": bds},
-                                {"bf": 128, "bd": 512}))
+    bf0, bd0 = 128, min(512, max(128, d))
+    plan = plan_rif(bd0 * bf0 * itemsize)
+    return _snapped(SearchSpace("grouped_matmul", {
+        "bf": bfs,
+        "bd": bds,
+        "rif": _pow2_range(1, 16),
+    }, {"bf": bf0, "bd": 512, "rif": plan.rif}))
 
 
 def _searchsorted_space(n: int, m: int) -> SearchSpace:

@@ -286,6 +286,19 @@ if st is not None:
             "dtype": st.sampled_from(("float32", "int32")),
         })
 
+    def gmm_cases():
+        """(t, d, f, e, bt, bf, bd, rif) for grouped_matmul."""
+        return st.fixed_dictionaries({
+            "t": st.integers(1, 300),
+            "d": st.sampled_from((32, 64, 200)),
+            "f": st.sampled_from((16, 64, 130)),
+            "e": st.integers(1, 5),
+            "bt": st.sampled_from((32, 128)),
+            "bf": st.sampled_from((128, 256)),
+            "bd": st.sampled_from((128, 256)),
+            "rif": _rifs(),
+        })
+
     def hash_cases():
         """(chains, chain_len, m, chunk, rif, max_steps) for hash_lookup."""
         return st.fixed_dictionaries({

@@ -10,8 +10,8 @@ Two tiers over the same check helpers:
   (skipped when the optional ``hypothesis`` extra is missing, as in the
   fast local tier; CI installs it).
 
-Plus dispatch-order tests for the chase ops: explicit knob → tune-cache
-winner → ``plan_rif`` analytic seeding.
+Plus dispatch-order tests for the chase and grouped-matmul ops:
+explicit knob → tune-cache winner → ``plan_rif`` analytic seeding.
 """
 
 import numpy as np
@@ -143,6 +143,25 @@ def check_hash(case, seed=0):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
+def check_gmm(case, seed=0):
+    from repro.kernels.grouped_matmul import grouped_matmul, grouped_matmul_ref
+    r = np.random.default_rng(seed)
+    t, d, f, e, bt = case["t"], case["d"], case["f"], case["e"], case["bt"]
+    nblk = -(-t // bt)
+    # small-integer data: every partial product and partial sum is exactly
+    # representable in float32, so pallas-vs-ref equality stays bitwise no
+    # matter how bd splits the contraction into accumulated tiles
+    x = jnp.asarray(r.integers(-4, 5, (t, d)), jnp.float32)
+    w = jnp.asarray(r.integers(-4, 5, (e, d, f)), jnp.float32)
+    hi = case.get("experts_used", e)
+    blk = jnp.asarray(r.integers(0, hi, nblk), jnp.int32)
+    out = grouped_matmul(x, w, blk, bt=bt, bf=case["bf"], bd=case["bd"],
+                         rif=case["rif"], interpret=True)
+    ref = grouped_matmul_ref(x, w, blk, bt)
+    assert out.shape == (t, f)
+    np.testing.assert_array_equal(_np(out), _np(ref))
+
+
 # ---------------------------------------------------------------------------
 # Deterministic edge-case grid (always runs)
 # ---------------------------------------------------------------------------
@@ -193,6 +212,18 @@ HASH_EDGES = [
          miss_rate=1.0),
 ]
 
+GMM_EDGES = [
+    dict(t=256, d=128, f=128, e=4, bt=128, bf=128, bd=128, rif=1),  # rif=1
+    dict(t=256, d=128, f=128, e=4, bt=128, bf=128, bd=128,
+         rif=64),                                          # rif > num blocks
+    dict(t=300, d=200, f=130, e=3, bt=128, bf=128, bd=128,
+         rif=2),                                           # tails everywhere
+    dict(t=64, d=64, f=64, e=1, bt=64, bf=128, bd=128, rif=2),  # one expert
+    dict(t=384, d=256, f=256, e=5, bt=128, bf=128, bd=128, rif=3,
+         experts_used=2),                # empty expert groups, nd = nf = 2
+    dict(t=0, d=16, f=8, e=2, bt=128, bf=128, bd=128, rif=2),   # T == 0
+]
+
 
 @pytest.mark.parametrize("case", GATHER_EDGES)
 def test_gather_edges(case):
@@ -224,6 +255,11 @@ def test_hash_edges(case):
     check_hash(case)
 
 
+@pytest.mark.parametrize("case", GMM_EDGES)
+def test_gmm_edges(case):
+    check_gmm(case)
+
+
 # ---------------------------------------------------------------------------
 # Ring construction contracts
 # ---------------------------------------------------------------------------
@@ -242,6 +278,17 @@ def test_chase_empty_inputs():
                       jnp.zeros((0,), jnp.int32),
                       jnp.zeros((0,), jnp.int32), interpret=True)
     assert out.shape == (0,) and out.dtype == jnp.int32
+
+
+def test_gmm_rejects_bad_routing_length():
+    """The routing stream must carry exactly one expert id per token
+    block (including the tail block) — a mismatch is a caller bug the op
+    refuses rather than silently truncating."""
+    from repro.kernels.grouped_matmul import grouped_matmul
+    x = jnp.zeros((200, 32), jnp.float32)
+    w = jnp.zeros((2, 32, 16), jnp.float32)
+    with pytest.raises(ValueError, match="2 token blocks"):
+        grouped_matmul(x, w, jnp.zeros(3, jnp.int32), bt=128)
 
 
 def test_ring_scratch_shapes_rejects_bad_depth():
@@ -346,6 +393,54 @@ def test_hash_dispatch_plan_fallback(tmp_cache, monkeypatch):
     assert calls[-1]["rif"] == plan_rif(ENTRY_LANES * 4).rif
 
 
+def test_gmm_dispatch_order(tmp_cache, monkeypatch):
+    from repro.core.pipeline import plan_rif
+    import repro.kernels.grouped_matmul.ops as gmm_ops
+    from repro.kernels.grouped_matmul import grouped_matmul, grouped_matmul_ref
+    from repro.tune import CacheEntry, backend_tag, default_cache, make_key
+
+    calls = []
+    real = gmm_ops._k.gmm
+
+    def spy(x, w, blk, *, bt, bf, bd, rif, interpret):
+        calls.append({"bf": bf, "bd": bd, "rif": rif})
+        return real(x, w, blk, bt=bt, bf=bf, bd=bd, rif=rif,
+                    interpret=interpret)
+
+    monkeypatch.setattr(gmm_ops._k, "gmm", spy)
+
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.integers(-4, 5, (256, 192)), jnp.float32)
+    w = jnp.asarray(r.integers(-4, 5, (3, 192, 128)), jnp.float32)
+    blk = jnp.asarray([0, 2], jnp.int32)
+
+    def run(**kw):
+        gmm_ops._gmm_impl.clear_cache()    # retrace so the spy records
+        out = grouped_matmul(x, w, blk, interpret=True, **kw)
+        np.testing.assert_array_equal(
+            _np(out), _np(grouped_matmul_ref(x, w, blk, 128)))
+        return calls[-1]
+
+    # 3. empty cache: bf/bd from the defaults (bd clipped to the padded
+    # contraction), rif from the analytic plan over one weight tile
+    seen = run()
+    bd0 = 256                              # min(512, round_up(192, 128))
+    assert seen == {"bf": 128, "bd": bd0,
+                    "rif": plan_rif(bd0 * 128 * 4).rif}
+
+    # 2. a tuned winner in the cache beats the analytic seed
+    key = make_key("grouped_matmul", (256, 192, 128), "float32",
+                   backend_tag(True), "wallclock")
+    default_cache().put(key, CacheEntry(
+        config={"bf": 64, "bd": 128, "rif": 3}, score=1.0))
+    seen = run()
+    assert seen == {"bf": 64, "bd": 128, "rif": 3}
+
+    # 1. explicit caller knobs beat the cache
+    seen = run(bf=128, bd=64, rif=2)
+    assert seen == {"bf": 128, "bd": 64, "rif": 2}
+
+
 # ---------------------------------------------------------------------------
 # Hypothesis sweeps (CI tier; local runs skip without the extra)
 # ---------------------------------------------------------------------------
@@ -394,3 +489,8 @@ else:
     @given(case=repo_st.hash_cases(), seed=st.integers(0, 2**16))
     def test_hash_sweep_hypothesis(case, seed):
         check_hash(case, seed)
+
+    @SWEEP
+    @given(case=repo_st.gmm_cases(), seed=st.integers(0, 2**16))
+    def test_gmm_sweep_hypothesis(case, seed):
+        check_gmm(case, seed)

@@ -192,15 +192,16 @@ def _case_grouped_matmul(monkeypatch):
     w = jnp.asarray(r.standard_normal((2, d, f)), jnp.float32)
     blk = jnp.zeros((t // 128,), jnp.int32)
     rec = []
-    _spy(monkeypatch, ops._k, "gmm", rec, ("bf", "bd"))
+    _spy(monkeypatch, ops._k, "gmm", rec, ("bf", "bd", "rif"))
     tuned, untuned = _tuned_untuned(
         lambda: ops.grouped_matmul(x, w, blk, interpret=True),
         lambda: _plant("grouped_matmul", (t, d, f), "float32",
-                       {"bf": 64, "bd": 128}),
+                       {"bf": 64, "bd": 128, "rif": 3}),
         rec)
-    # both plants survive the min(knob, round_up(dim, 128)) clamps at
-    # these dims
-    return tuned, untuned, {"bf": 64, "bd": 128}
+    # the block plants survive the min(knob, round_up(dim, 128)) clamps
+    # at these dims, and explicit-from-cache rif bypasses ring_rif's
+    # plan_rif fallback
+    return tuned, untuned, {"bf": 64, "bd": 128, "rif": 3}
 
 
 def _case_batched_searchsorted(monkeypatch):
